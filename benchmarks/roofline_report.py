@@ -1,0 +1,57 @@
+"""Render the dry-run artifacts into the §Dry-run / §Roofline tables.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [dryrun_results.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.analysis.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def render(path: str = "dryrun_results.json") -> str:
+    recs = json.load(open(path))
+    # optional extra artifact files (paper models, perf variants)
+    import os
+    for extra in ("dryrun_paper_models.json",):
+        if os.path.exists(extra) and extra != path:
+            recs = recs + json.load(open(extra))
+    lines = []
+    lines.append("| arch | shape | mesh | fits (args+temp GiB) | t_comp ms | "
+                 "t_mem ms | t_coll ms | bottleneck | useful FLOPs frac |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                         f"skipped: {r['reason'][:60]} | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                         f"FAILED: {r.get('error','?')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        mm = r["memory"]
+        tot = (mm["argument_bytes"] + mm["temp_bytes"]) / 2**30
+        frac = rf.get("useful_flops_frac")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {'Y' if tot < 16 else 'tight'} ({tot:.1f}) "
+            f"| {rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} "
+            f"| {rf['t_collective_s']*1e3:.2f} | {rf['bottleneck']} "
+            f"| {frac:.2f} |" if frac else
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {'Y' if tot < 16 else 'tight'} ({tot:.1f}) "
+            f"| {rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} "
+            f"| {rf['t_collective_s']*1e3:.2f} | {rf['bottleneck']} | n/a |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    print(render(path))

@@ -1,0 +1,69 @@
+"""End-to-end training driver: a ~100M-param llama-family model for a few
+hundred steps on structured synthetic data, with fault-tolerant checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--resume]
+
+Loss falls well below the unigram entropy as the model learns the copy
+structure in the data (induction heads).  Kill it mid-run and start again
+with --resume: it continues bitwise from the last checkpoint.
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import make_batch_fn
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train import optimizer as O
+from repro.train.train_loop import LoopConfig, make_train_step, train_loop
+
+# ~100M params: a shrunk llama3-family config
+CONFIG_100M = ModelConfig(
+    name="llama-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=16384,
+    pattern=("attn",), ffn_kind="swiglu", rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = CONFIG_100M
+    opt = O.OptimizerConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    opt_state = O.init_opt_state(params, opt)
+    n = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params)")
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        restored, start = mgr.restore({"params": params,
+                                       "opt_state": opt_state})
+        params, opt_state = restored["params"], restored["opt_state"]
+        print(f"resumed from step {start}")
+
+    batch_fn = make_batch_fn(cfg, args.seq_len, args.batch)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    params, opt_state, hist = train_loop(
+        step_fn, params, opt_state, batch_fn,
+        LoopConfig(total_steps=args.steps, log_every=10, checkpoint_every=50),
+        checkpoint_mgr=mgr, start_step=start)
+    print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f}); "
+          f"uniform entropy would be {np.log(cfg.vocab_size):.2f}")
+
+
+if __name__ == "__main__":
+    main()

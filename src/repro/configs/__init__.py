@@ -1,0 +1,67 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <name>``.
+
+Assigned architectures (public-literature configs) plus the paper's own
+evaluation models.  Each module defines CONFIG (full size) and SMOKE (a
+reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+_ASSIGNED = [
+    "yi-9b", "llama3.2-1b", "yi-34b", "smollm-360m", "xlstm-1.3b",
+    "deepseek-v2-236b", "dbrx-132b", "zamba2-2.7b", "paligemma-3b",
+    "hubert-xlarge",
+]
+_PAPER = [
+    "mamba2-2.7b", "retnet-2.7b", "gla-2.7b", "hgrn2-2.7b", "opt-6.7b",
+]
+
+ASSIGNED_ARCHS = tuple(_ASSIGNED)
+PAPER_ARCHS = tuple(_PAPER)
+ALL_ARCHS = ASSIGNED_ARCHS + PAPER_ARCHS
+
+
+def _module_name(arch: str) -> str:
+    return "repro.configs." + arch.replace("-", "_").replace(".", "p")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ALL_ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
+    return importlib.import_module(_module_name(arch)).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in ALL_ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
+    return importlib.import_module(_module_name(arch)).SMOKE
+
+
+# ---------------------------------------------------------------------------
+# shape-cell applicability (see DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+_FULL_ATTENTION = {
+    "yi-9b", "llama3.2-1b", "yi-34b", "smollm-360m", "deepseek-v2-236b",
+    "dbrx-132b", "paligemma-3b", "opt-6.7b",
+}
+_ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cell_supported(arch: str, shape: str) -> tuple:
+    """(supported, reason) for an (arch x shape) dry-run cell."""
+    sc = SHAPES[shape]
+    if arch in _ENCODER_ONLY and sc.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and arch in _FULL_ATTENTION:
+        return False, ("pure full-attention arch: 524k context needs "
+                       "sub-quadratic attention (skipped per spec)")
+    return True, ""
+
+
+def all_cells(archs=ASSIGNED_ARCHS) -> List[tuple]:
+    return [(a, s) for a in archs for s in SHAPES]

@@ -1,0 +1,120 @@
+"""Quantized KV-cache container for decode attention (paper §5.4 layout).
+
+Keys/values are packed MX8 along the head dimension (one 16-value group per
+DRAM-column-sized sub-chunk in the paper's terms).  Supports GQA caches
+(separate K and V streams) and MLA caches (a single compressed latent stream
+whose first ``v_width`` lanes double as values).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core.state_update import StateQuantConfig
+from repro.kernels import ops
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time KV cache for one attention layer.
+
+    k/v are either `QuantizedTensor` (packed) or plain arrays (baseline
+    formats).  `lengths` is (B,) -- the number of valid cached positions per
+    sequence.  For MLA, `v` is None and `k` holds the latent stream.
+    """
+    k: object
+    v: Optional[object]
+    lengths: jnp.ndarray
+    fmt: str = "mx8"
+    v_width: Optional[int] = None     # MLA only
+
+    def tree_flatten_with_keys(self):
+        GK = jax.tree_util.GetAttrKey
+        return ([(GK("k"), self.k), (GK("v"), self.v),
+                 (GK("lengths"), self.lengths)], (self.fmt, self.v_width))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k, v, lengths = children
+        return cls(k, v, lengths, *aux)
+
+    @property
+    def max_len(self) -> int:
+        shape = self.k.shape
+        return shape[1]
+
+
+def init_kv_cache(B: int, T: int, KVH: int, dk: int,
+                  cfg: StateQuantConfig, dv: Optional[int] = None,
+                  mla_v_width: Optional[int] = None) -> KVCache:
+    """Preallocate a zeroed cache of capacity T (multiple of 128)."""
+    assert T % 128 == 0, "cache capacity must be tile-aligned"
+    dv = dv if dv is not None else dk
+    lengths = jnp.zeros((B,), jnp.int32)
+    if cfg.quantized:
+        zk = F.quantize(jnp.zeros((B, T, KVH, dk), jnp.float32), cfg.fmt)
+        zv = (None if mla_v_width is not None else
+              F.quantize(jnp.zeros((B, T, KVH, dv), jnp.float32), cfg.fmt))
+        return KVCache(zk, zv, lengths, cfg.fmt, mla_v_width)
+    dt = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "fp16": jnp.float16}[cfg.fmt]
+    zk = jnp.zeros((B, T, KVH, dk), dt)
+    zv = None if mla_v_width is not None else jnp.zeros((B, T, KVH, dv), dt)
+    return KVCache(zk, zv, lengths, cfg.fmt, mla_v_width)
+
+
+def _update_at(buf: jnp.ndarray, rows: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Write rows (B, n, ...) into buf (B, T, ...) at per-batch offsets idx."""
+    def upd(b, r, i):
+        return jax.lax.dynamic_update_slice(b, r.astype(b.dtype),
+                                            (i,) + (0,) * (b.ndim - 1))
+    return jax.vmap(upd)(buf, rows, idx)
+
+
+def append(cache: KVCache, k_new: jnp.ndarray,
+           v_new: Optional[jnp.ndarray], cfg: StateQuantConfig,
+           seed=0) -> KVCache:
+    """Append one (or n) token(s): k_new (B, n, KVH, dk)."""
+    if isinstance(cache.k, F.QuantizedTensor):
+        bits = (F.sr_bits(k_new.shape, seed)
+                if cfg.rounding == "stochastic" else None)
+        qk = F.quantize(k_new, cache.fmt, cfg.rounding, bits)
+        payload = {f: _update_at(cache.k.payload[f], qk.payload[f], cache.lengths)
+                   for f in cache.k.payload}
+        nk = F.QuantizedTensor(cache.fmt, cache.k.shape, payload)
+        nv = None
+        if v_new is not None:
+            bits_v = (F.sr_bits(v_new.shape, seed + 1)
+                      if cfg.rounding == "stochastic" else None)
+            qv = F.quantize(v_new, cache.fmt, cfg.rounding, bits_v)
+            vpayload = {f: _update_at(cache.v.payload[f], qv.payload[f], cache.lengths)
+                        for f in cache.v.payload}
+            nv = F.QuantizedTensor(cache.fmt, cache.v.shape, vpayload)
+    else:
+        nk = _update_at(cache.k, k_new, cache.lengths)
+        nv = None if v_new is None else _update_at(cache.v, v_new, cache.lengths)
+    n = k_new.shape[1]
+    return KVCache(nk, nv, cache.lengths + n, cache.fmt, cache.v_width)
+
+
+def attend(cache: KVCache, q: jnp.ndarray, cfg: StateQuantConfig,
+           scale: Optional[float] = None) -> jnp.ndarray:
+    """Decode attention of current-token queries q (B,H,dk) vs the cache."""
+    if isinstance(cache.k, F.QuantizedTensor):
+        if cache.fmt == "mx8":
+            return ops.attention_decode(q, cache.k, cache.v, cache.lengths,
+                                        scale=scale, v_width=cache.v_width,
+                                        backend=cfg.backend)
+        kf = F.dequantize(cache.k)
+        vf = (kf[..., :cache.v_width] if cache.v is None
+              else F.dequantize(cache.v))
+    else:
+        kf = cache.k.astype(jnp.float32)
+        vf = (kf[..., :cache.v_width] if cache.v is None
+              else cache.v.astype(jnp.float32))
+    from repro.kernels import ref as _ref
+    return _ref.attention_decode_ref(q, kf, vf, cache.lengths, scale)

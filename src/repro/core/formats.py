@@ -1,0 +1,318 @@
+"""Low-precision numeric formats for state / KV-cache quantization.
+
+Implements the formats studied in Pimba §3.2 / §4.2 (paper Figs. 4 and 6):
+
+* ``mx8``      -- Microsoft MX, 8-bit average: groups of 16 values share an
+                  8-bit exponent, pairs of values share a 1-bit micro-exponent,
+                  each value stores sign + 6-bit mantissa.  The Pareto-optimal
+                  format chosen by the paper.
+* ``int8``     -- 8-bit integer with a per-32-element scale (the "GPU+Q"
+                  baseline format).
+* ``fp8_e4m3`` / ``fp8_e5m2`` -- 8-bit floats (shown by the paper to suffer
+                  from swamping in state-update workloads).
+* ``fp16`` / ``bf16`` / ``fp32`` -- reference formats.
+
+Each format supports round-to-nearest-even and stochastic rounding (SR).
+SR consumes caller-supplied uniform uint32 bits so that the host path and the
+Pallas kernel path (which generates bits with the same counter-based hash,
+see :func:`counter_hash_u32`) are bit-compatible and reproducible.
+
+All quantization groups run along the **last** axis of the input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Format registry
+# ---------------------------------------------------------------------------
+
+MX8_GROUP = 16          # values per shared exponent
+MX8_PAIR = 2            # values per micro-exponent
+MX8_MBITS = 6           # mantissa magnitude bits (sign stored separately)
+INT8_GROUP = 32         # values per scale in the int8-scaled format
+
+FORMATS = ("fp32", "bf16", "fp16", "fp8_e4m3", "fp8_e5m2", "int8", "mx8")
+ROUNDINGS = ("nearest", "stochastic")
+
+#: average storage bits per value, used for memory/bandwidth accounting.
+FORMAT_BITS: Dict[str, float] = {
+    "fp32": 32.0,
+    "bf16": 16.0,
+    "fp16": 16.0,
+    "fp8_e4m3": 8.0,
+    "fp8_e5m2": 8.0,
+    # 8 bits + fp16 scale per 32 values
+    "int8": 8.0 + 16.0 / INT8_GROUP,
+    # sign+6b mantissa + 8b exponent / 16 + 1b microexponent / 2
+    "mx8": (1 + MX8_MBITS) + 8.0 / MX8_GROUP + 1.0 / MX8_PAIR,
+}
+
+_FP8_MAX = {"fp8_e4m3": 448.0, "fp8_e5m2": 57344.0}
+_FP8_MBITS = {"fp8_e4m3": 3, "fp8_e5m2": 2}
+_FP8_EMIN = {"fp8_e4m3": -6, "fp8_e5m2": -14}   # min normal exponent
+_FP8_DTYPE = {"fp8_e4m3": jnp.float8_e4m3fn, "fp8_e5m2": jnp.float8_e5m2}
+
+#: bias applied to the stored MX group exponent (uint8).
+MX8_EXP_BIAS = 127
+
+
+# ---------------------------------------------------------------------------
+# QuantizedTensor pytree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """An opaque quantized array.  ``payload`` holds format-specific parts."""
+
+    fmt: str
+    shape: tuple
+    payload: Dict[str, jnp.ndarray]
+
+    def tree_flatten_with_keys(self):
+        keys = tuple(sorted(self.payload))
+        children = [(jax.tree_util.DictKey(k), self.payload[k]) for k in keys]
+        return children, (self.fmt, self.shape, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, shape, keys = aux
+        return cls(fmt, shape, dict(zip(keys, children)))
+
+    @property
+    def nbytes_logical(self) -> float:
+        """Logical storage bytes (as a real packed implementation would use)."""
+        n = float(np.prod(self.shape))
+        return n * FORMAT_BITS[self.fmt] / 8.0
+
+
+# ---------------------------------------------------------------------------
+# Random bits for stochastic rounding
+# ---------------------------------------------------------------------------
+
+def counter_hash_u32(counter: jnp.ndarray, seed) -> jnp.ndarray:
+    """Counter-based stateless PRNG ("lowbias32" integer hash).
+
+    This is the software analogue of Pimba's per-SPE LFSR: cheap, stateless,
+    and identical between the host reference path and the Pallas kernels (it
+    uses only elementwise uint32 ops, so it lowers to the TPU VPU directly).
+    """
+    x = counter.astype(jnp.uint32) ^ (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def sr_bits(shape, seed, offset=0) -> jnp.ndarray:
+    """Uniform uint32 bits for SR over an array of ``shape``."""
+    n = int(np.prod(shape))
+    idx = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(offset)
+    return counter_hash_u32(idx, seed).reshape(shape)
+
+
+def _u32_to_unit(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32 -> uniform in [0, 1)."""
+    return bits.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def _round(x: jnp.ndarray, rounding: str, bits: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Round float values to integers with RNE or SR."""
+    if rounding == "nearest":
+        return jnp.round(x)  # round-half-to-even
+    if bits is None:
+        raise ValueError("stochastic rounding requires random bits")
+    return jnp.floor(x + _u32_to_unit(bits))
+
+
+# ---------------------------------------------------------------------------
+# MX8
+# ---------------------------------------------------------------------------
+
+def _frexp_exponent(x: jnp.ndarray) -> jnp.ndarray:
+    """e such that 2^(e-1) <= x < 2^e for normal x>0 (0 -> very small exponent).
+
+    Implemented by exponent-field extraction (not ``jnp.frexp``) so the exact
+    same integer ops run inside Pallas kernels and on the host -- this is what
+    makes kernel-vs-reference comparisons bitwise, and it is also how the
+    hardware exponent unit works.
+    """
+    raw = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    e = ((raw >> 23) & 0xFF) - 126
+    return jnp.where(x > 0, e, -MX8_EXP_BIAS + 1).astype(jnp.int32)
+
+
+def mx8_quantize(x: jnp.ndarray, rounding: str = "nearest",
+                 bits: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    """Quantize to MX8 along the last axis (length must divide MX8_GROUP)."""
+    orig_shape = x.shape
+    n = x.shape[-1]
+    assert n % MX8_GROUP == 0, f"last dim {n} not divisible by {MX8_GROUP}"
+    xf = x.astype(jnp.float32)
+    g = xf.reshape(*x.shape[:-1], n // MX8_GROUP, MX8_GROUP)
+    gmax = jnp.max(jnp.abs(g), axis=-1)                       # (..., G)
+    e = _frexp_exponent(gmax)                                  # shared exponent
+    e = jnp.clip(e, -MX8_EXP_BIAS + 1, 127)
+
+    p = g.reshape(*g.shape[:-1], MX8_GROUP // MX8_PAIR, MX8_PAIR)
+    pmax = jnp.max(jnp.abs(p), axis=-1)                        # (..., G, 8)
+    # micro-exponent: 1 => pair magnitudes fit in half the group range, so we
+    # can shift the pair scale down one binade and gain a mantissa bit.
+    micro = (pmax < jnp.exp2((e - 1)[..., None].astype(jnp.float32))).astype(jnp.int32)
+    scale = jnp.exp2((e[..., None] - MX8_MBITS - micro).astype(jnp.float32))  # (...,G,8)
+    q = p / scale[..., None]
+    if bits is not None:
+        bits = bits.reshape(p.shape)
+    q = _round(q, rounding, bits)
+    q = jnp.clip(q, -63, 63).astype(jnp.int8)
+
+    mant = q.reshape(*x.shape[:-1], n)
+    exp_stored = (e + MX8_EXP_BIAS).astype(jnp.uint8)
+    # pack the 8 pair-bits of each group into one byte (iota-based so the
+    # same code can run inside Pallas kernel bodies)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, micro.shape, micro.ndim - 1)
+    micro_packed = jnp.sum(
+        jnp.left_shift(micro.astype(jnp.uint32), shifts), axis=-1).astype(jnp.uint8)
+    return QuantizedTensor("mx8", orig_shape, {
+        "mantissa": mant, "exponent": exp_stored, "micro": micro_packed,
+    })
+
+
+def mx8_dequantize(qt: QuantizedTensor) -> jnp.ndarray:
+    mant = qt.payload["mantissa"].astype(jnp.float32)
+    e = qt.payload["exponent"].astype(jnp.int32) - MX8_EXP_BIAS   # (..., G)
+    mp = qt.payload["micro"].astype(jnp.int32)                     # (..., G)
+    bshape = mp.shape + (MX8_GROUP // MX8_PAIR,)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, bshape, mp.ndim)
+    micro = (mp[..., None] >> shifts) & 1                          # (..., G, 8)
+    scale = jnp.exp2((e[..., None] - MX8_MBITS - micro).astype(jnp.float32))
+    n = qt.shape[-1]
+    p = mant.reshape(*mant.shape[:-1], n // MX8_GROUP, MX8_GROUP // MX8_PAIR, MX8_PAIR)
+    out = p * scale[..., None]
+    return out.reshape(qt.shape)
+
+
+# ---------------------------------------------------------------------------
+# int8 with per-group scale
+# ---------------------------------------------------------------------------
+
+def int8_quantize(x: jnp.ndarray, rounding: str = "nearest",
+                  bits: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    orig_shape = x.shape
+    n = x.shape[-1]
+    assert n % INT8_GROUP == 0, f"last dim {n} not divisible by {INT8_GROUP}"
+    xf = x.astype(jnp.float32)
+    g = xf.reshape(*x.shape[:-1], n // INT8_GROUP, INT8_GROUP)
+    gmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(gmax > 0, gmax / 127.0, 1.0)
+    q = g / scale
+    if bits is not None:
+        bits = bits.reshape(g.shape)
+    q = jnp.clip(_round(q, rounding, bits), -127, 127).astype(jnp.int8)
+    return QuantizedTensor("int8", orig_shape, {
+        "q": q.reshape(*x.shape[:-1], n),
+        "scale": scale.squeeze(-1).astype(jnp.float16),
+    })
+
+
+def int8_dequantize(qt: QuantizedTensor) -> jnp.ndarray:
+    q = qt.payload["q"].astype(jnp.float32)
+    scale = qt.payload["scale"].astype(jnp.float32)
+    n = qt.shape[-1]
+    g = q.reshape(*q.shape[:-1], n // INT8_GROUP, INT8_GROUP)
+    return (g * scale[..., None]).reshape(qt.shape)
+
+
+# ---------------------------------------------------------------------------
+# fp8 (emulated)
+# ---------------------------------------------------------------------------
+
+def _fp8_quantize_values(x: jnp.ndarray, fmt: str, rounding: str,
+                         bits: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Returns fp8 values stored as their own dtype."""
+    xf = x.astype(jnp.float32)
+    fmax = _FP8_MAX[fmt]
+    xf = jnp.clip(xf, -fmax, fmax)
+    if rounding == "nearest":
+        return xf.astype(_FP8_DTYPE[fmt])
+    # Stochastic rounding: snap to the ulp grid of the target format, then the
+    # exact cast is value-preserving.
+    mbits = _FP8_MBITS[fmt]
+    _, e = jnp.frexp(xf)
+    e = jnp.where(xf != 0, e, _FP8_EMIN[fmt])
+    # exponent of the representable binade: 2^(e-1) <= |x| < 2^e
+    ulp_exp = jnp.maximum(e - 1, _FP8_EMIN[fmt]) - mbits
+    ulp = jnp.exp2(ulp_exp.astype(jnp.float32))
+    q = jnp.floor(xf / ulp + _u32_to_unit(bits)) * ulp
+    q = jnp.clip(q, -fmax, fmax)
+    return q.astype(_FP8_DTYPE[fmt])
+
+
+def fp8_quantize(x: jnp.ndarray, fmt: str, rounding: str = "nearest",
+                 bits: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    return QuantizedTensor(fmt, x.shape,
+                           {"x": _fp8_quantize_values(x, fmt, rounding, bits)})
+
+
+# ---------------------------------------------------------------------------
+# Unified entry points
+# ---------------------------------------------------------------------------
+
+def quantize(x: jnp.ndarray, fmt: str, rounding: str = "nearest",
+             bits: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    """Quantize ``x`` (groups along the last axis) into ``fmt``."""
+    if fmt == "mx8":
+        return mx8_quantize(x, rounding, bits)
+    if fmt == "int8":
+        return int8_quantize(x, rounding, bits)
+    if fmt in _FP8_DTYPE:
+        return fp8_quantize(x, fmt, rounding, bits)
+    if fmt in ("fp16", "bf16"):
+        dt = jnp.float16 if fmt == "fp16" else jnp.bfloat16
+        return QuantizedTensor(fmt, x.shape, {"x": x.astype(dt)})
+    if fmt == "fp32":
+        return QuantizedTensor(fmt, x.shape, {"x": x.astype(jnp.float32)})
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
+    if qt.fmt == "mx8":
+        return mx8_dequantize(qt)
+    if qt.fmt == "int8":
+        return int8_dequantize(qt)
+    return qt.payload["x"].astype(jnp.float32)
+
+
+def quantize_like(x: jnp.ndarray, qt: QuantizedTensor, rounding: str = "nearest",
+                  bits: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    return quantize(x, qt.fmt, rounding, bits)
+
+
+# ---------------------------------------------------------------------------
+# "Strict" MX arithmetic (paper §5.3 adder/multiplier semantics)
+# ---------------------------------------------------------------------------
+# Pimba's SPE computes directly on MX operands with shift-aligned integer
+# add/multiply.  On TPU we compute in f32 between MX8 load/store (see
+# DESIGN.md §2); the functions below emulate the *stricter* hardware
+# semantics -- every intermediate re-enters MX8 -- for the accuracy study.
+
+def strict_mx_add(a: jnp.ndarray, b: jnp.ndarray, rounding: str = "nearest",
+                  bits: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(quantize(a) + quantize(b)) requantized: models the MX adder path."""
+    s = dequantize(mx8_quantize(a)) + dequantize(mx8_quantize(b))
+    return dequantize(mx8_quantize(s, rounding, bits))
+
+
+def strict_mx_mul(a: jnp.ndarray, b: jnp.ndarray, rounding: str = "nearest",
+                  bits: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    p = dequantize(mx8_quantize(a)) * dequantize(mx8_quantize(b))
+    return dequantize(mx8_quantize(p, rounding, bits))

@@ -1,0 +1,84 @@
+"""The paper's core abstraction: the generalized state-update operation.
+
+Post-transformer mixers (Mamba-2, GLA, RetNet, HGRN2, mLSTM) all reduce at
+decode time to paper Eq. 2:
+
+    S_t = d_t ⊙ S_{t-1} + k_t v_tᵀ ;   y_t = S_tᵀ q_t
+
+This module provides the *stateful container* and the step function that the
+model zoo and the serving engine build on.  The state lives in a configurable
+storage format (fp32/bf16/fp16 baselines, int8, or the paper's MX8) and is
+re-quantized with stochastic rounding every step -- the property Pimba's
+accuracy results rest on (paper §3.2).
+
+Storage layout for quantized states is ``(B, H, dv, dk)`` (Sᵀ) with MX groups
+along dk; see kernels/mx_state_update.py for why.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class StateQuantConfig:
+    """How recurrent state (and KV caches) are stored."""
+    fmt: str = "mx8"                 # fp32|bf16|fp16|fp8_e4m3|fp8_e5m2|int8|mx8
+    rounding: str = "stochastic"     # nearest|stochastic
+    backend: str = "pallas"          # pallas|jnp
+
+    @property
+    def quantized(self) -> bool:
+        return self.fmt in ("mx8", "int8", "fp8_e4m3", "fp8_e5m2")
+
+
+StateLike = Union[F.QuantizedTensor, jnp.ndarray]
+
+
+def init_state(B: int, H: int, dk: int, dv: int,
+               cfg: StateQuantConfig) -> StateLike:
+    """Zero-initialized recurrent state, stored layout (B, H, dv, dk)."""
+    zeros = jnp.zeros((B, H, dv, dk), jnp.float32)
+    if not cfg.quantized:
+        dt = {"fp32": jnp.float32, "bf16": jnp.bfloat16,
+              "fp16": jnp.float16}[cfg.fmt]
+        return zeros.astype(dt)
+    return F.quantize(zeros, cfg.fmt)
+
+
+def state_update_step(
+    state: StateLike,
+    d: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, q: jnp.ndarray,
+    cfg: StateQuantConfig, seed=0,
+) -> Tuple[StateLike, jnp.ndarray]:
+    """One decode step of Eq. 2 on the stored state.
+
+    d: (B,H,dk) or (B,H,1); k,q: (B,H,dk); v: (B,H,dv)  ->  y: (B,H,dv) f32.
+    """
+    if isinstance(state, F.QuantizedTensor):
+        if state.fmt == "mx8":
+            return ops.state_update(state, d, k, v, q, seed,
+                                    rounding=cfg.rounding, backend=cfg.backend)
+        # int8 / fp8 paths: jnp reference semantics (used by the format study)
+        B, H, dv, dk = state.shape
+        St = F.dequantize(state)
+        d_ = jnp.broadcast_to(d.astype(jnp.float32), (B, H, dk))[:, :, None, :]
+        Sn = St * d_ + (v.astype(jnp.float32)[..., :, None]
+                        * k.astype(jnp.float32)[..., None, :])
+        bits = F.sr_bits(Sn.shape, seed) if cfg.rounding == "stochastic" else None
+        qSn = F.quantize(Sn, state.fmt, cfg.rounding, bits)
+        y = jnp.einsum("bhvk,bhk->bhv", F.dequantize(qSn), q.astype(jnp.float32))
+        return qSn, y
+    Sn, y = ops.state_update_float(state, d, k, v, q, dtype=state.dtype)
+    return Sn, y
+
+
+def state_nbytes(B: int, H: int, dk: int, dv: int, cfg: StateQuantConfig) -> float:
+    """Logical storage bytes of one layer's state (bandwidth accounting)."""
+    return B * H * dk * dv * F.FORMAT_BITS[cfg.fmt] / 8.0

@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: flash-decoding attention over an MX8-packed KV cache.
+
+Implements Pimba's attention mode (paper §5.4) as one fused kernel instead of
+the paper's two-phase GPU⇄PIM handoff (score -> host softmax -> attend):
+
+  * score phase  : q · Kᵀ on dequantized MX8 key tiles (the in-pipeline dot
+                   product unit)
+  * softmax      : streaming (flash) max/sum accumulators in VMEM -- on TPU
+                   there is no reason to bounce partial scores to the host,
+                   which removes the paper's §8 "blocked GPU/PIM" bubble
+  * attend phase : probability-weighted accumulation of dequantized MX8
+                   value tiles (the SPE multiplier/adder path)
+
+GQA is handled by processing all G = H / KV_heads query heads of a KV head
+together against each KV tile (operand reuse across the chunk group, the
+analogue of Pimba broadcasting shared operands once per chunk group).
+
+MLA mode (DeepSeek-V2): the cache is a single compressed latent stream; the
+same tiles serve as keys (full width) and values (first ``v_width`` lanes),
+so pass ``v_width`` and leave the V refs aliased to the K refs at call site
+is not needed -- the kernel reads the K refs for both phases.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import formats as F
+
+MXG = F.MX8_GROUP
+NEG_INF = -1e30
+
+
+def _deq(mant, exp, micro):
+    qt = F.QuantizedTensor("mx8", mant.shape,
+                           {"mantissa": mant, "exponent": exp, "micro": micro})
+    return F.mx8_dequantize(qt)
+
+
+def _attn_kernel(
+    # inputs
+    len_ref, q_ref, km_ref, ke_ref, kmi_ref, vm_ref, ve_ref, vmi_ref,
+    # outputs
+    y_ref,
+    # scratch
+    m_scr, l_scr, acc_scr,
+    *, t_blk: int, n_t: int, v_width: int, mla: bool,
+):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qv = q_ref[0, 0].astype(jnp.float32)                        # (G, dk)
+    K = _deq(km_ref[0, :, 0, :], ke_ref[0, :, 0, :], kmi_ref[0, :, 0, :])
+    if mla:
+        V = K[:, :v_width]
+    else:
+        V = _deq(vm_ref[0, :, 0, :], ve_ref[0, :, 0, :], vmi_ref[0, :, 0, :])
+
+    scores = jax.lax.dot_general(
+        qv, K, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                     # (G, t_blk)
+    pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + t * t_blk
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_scr[...]                                         # (G, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                                 # (G, t_blk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, V, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                     # (G, dv)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(t == n_t - 1)
+    def _finish():
+        y_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_block", "interpret", "v_width", "scale"),
+)
+def mx_attention_decode(
+    q: jnp.ndarray,                 # (B, H, dk) current-token queries
+    qK: F.QuantizedTensor,          # (B, T, KVH, dk) packed keys
+    qV: Optional[F.QuantizedTensor],  # (B, T, KVH, dv) packed values; None => MLA
+    lengths: jnp.ndarray,           # (B,) int32 valid cache length
+    *, scale: Optional[float] = None, v_width: Optional[int] = None,
+    t_block: int = 128, interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused decode attention; returns (B, H, dv) f32."""
+    B, H, dk = q.shape
+    _, T, KVH, dkc = qK.shape
+    assert dk == dkc and H % KVH == 0 and T % t_block == 0
+    G = H // KVH
+    n_t = T // t_block
+    mla = qV is None
+    dv = v_width if mla else qV.shape[-1]
+    assert dv is not None
+
+    scale = scale if scale is not None else dk ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KVH, G, dk)
+    lens = lengths.astype(jnp.int32).reshape(B, 1)
+
+    km = qK.payload["mantissa"]
+    ke = qK.payload["exponent"]
+    kmi = qK.payload["micro"]
+    if mla:
+        vm, ve, vmi = km[:, :1], ke[:, :1], kmi[:, :1]   # dummies (unused)
+        vgroups = dkc // MXG
+    else:
+        vm = qV.payload["mantissa"]
+        ve = qV.payload["exponent"]
+        vmi = qV.payload["micro"]
+        vgroups = dv // MXG
+
+    v_t_blk = 1 if mla else t_block
+    kernel = functools.partial(
+        _attn_kernel, t_blk=t_block, n_t=n_t, v_width=dv, mla=mla)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, KVH, n_t),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, t: (b, 0)),                    # len
+            pl.BlockSpec((1, 1, G, dk), lambda b, h, t: (b, h, 0, 0)),       # q
+            pl.BlockSpec((1, t_block, 1, dk), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, t_block, 1, dk // MXG), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, t_block, 1, dk // MXG), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, v_t_blk, 1, vgroups * MXG),
+                         lambda b, h, t: (b, 0 if v_t_blk == 1 else t, h, 0)),
+            pl.BlockSpec((1, v_t_blk, 1, vgroups),
+                         lambda b, h, t: (b, 0 if v_t_blk == 1 else t, h, 0)),
+            pl.BlockSpec((1, v_t_blk, 1, vgroups),
+                         lambda b, h, t: (b, 0 if v_t_blk == 1 else t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dv), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qg, km, ke, kmi, vm, ve, vmi)
+
+    return y.reshape(B, H, dv)

@@ -1,0 +1,83 @@
+"""Public jit'd entry points for the Pallas kernels, with pure-jnp fallbacks.
+
+Dispatch policy
+---------------
+``backend='pallas'``  -- the fused Pallas kernels (``interpret=True`` here on
+                         CPU; compiled natively on real TPUs).
+``backend='jnp'``     -- mathematically identical pure-jnp path.  This is what
+                         the multi-pod **dry-run lowers**: interpret-mode
+                         pallas would trace its grid as an unrolled Python
+                         loop (compile-time explosion at production sizes)
+                         and would distort cost analysis.  XLA fuses the
+                         dequant→update→requant chain, so HLO bytes match the
+                         kernel's logical traffic closely (verified in
+                         EXPERIMENTS.md §Roofline).
+
+Numerics are identical between backends (bitwise for the packed state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.kernels import ref as _ref
+from repro.kernels.mx_attention import mx_attention_decode as _attn_pallas
+from repro.kernels.mx_quant import mx_quantize as _quant_pallas
+from repro.kernels.mx_state_update import mx_state_update as _su_pallas
+
+DEFAULT_BACKEND = "pallas"
+
+
+def state_update(
+    qS: F.QuantizedTensor,
+    d: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, q: jnp.ndarray,
+    seed, *, rounding: str = "stochastic", backend: str = DEFAULT_BACKEND,
+) -> Tuple[F.QuantizedTensor, jnp.ndarray]:
+    """Fused quantized state update; state layout (B, H, dv, dk)."""
+    if backend == "pallas":
+        return _su_pallas(qS, d, k, v, q, jnp.asarray(seed, jnp.int32),
+                          rounding=rounding, interpret=True)
+    return _ref.quantized_state_update_stored_ref(
+        qS, d, k, v, q, rounding=rounding, seed=seed)
+
+
+def state_update_float(S: jnp.ndarray, d, k, v, q,
+                       dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unquantized baseline (the paper's "GPU" fp16 configuration).
+
+    State layout (B, H, dv, dk) to match the quantized path.
+    """
+    St = S.astype(jnp.float32)
+    d_ = jnp.broadcast_to(d.astype(jnp.float32), St.shape[:2] + St.shape[-1:])
+    Sn = St * d_[:, :, None, :] + (v.astype(jnp.float32)[..., :, None]
+                                   * k.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhvk,bhk->bhv", Sn, q.astype(jnp.float32))
+    return Sn.astype(dtype), y
+
+
+def attention_decode(
+    q: jnp.ndarray,
+    qK: F.QuantizedTensor, qV: Optional[F.QuantizedTensor],
+    lengths: jnp.ndarray,
+    *, scale: Optional[float] = None, v_width: Optional[int] = None,
+    t_block: int = 128, backend: str = DEFAULT_BACKEND,
+) -> jnp.ndarray:
+    """Fused decode attention over packed MX8 KV cache (GQA or MLA)."""
+    if backend == "pallas":
+        return _attn_pallas(q, qK, qV, lengths, scale=scale,
+                            v_width=v_width, t_block=t_block, interpret=True)
+    if qV is None:  # MLA: values are a prefix slice of the latent cache
+        kf = F.dequantize(qK)
+        return _ref.attention_decode_ref(q, kf, kf[..., :v_width], lengths, scale)
+    return _ref.mx_attention_decode_ref(q, qK, qV, lengths, scale)
+
+
+def quantize_mx8(x: jnp.ndarray, seed=0, *, rounding: str = "nearest",
+                 backend: str = DEFAULT_BACKEND) -> F.QuantizedTensor:
+    """MX8 quantization (groups along last axis)."""
+    if backend == "pallas":
+        return _quant_pallas(x, seed, rounding=rounding, interpret=True)
+    return _ref.mx_quantize_ref(x, rounding=rounding, seed=seed)

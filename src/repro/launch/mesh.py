@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is pure
+data parallelism over the inter-pod (DCN-class) network -- only gradient
+all-reduces cross it, optionally int8-compressed (dist/compression.py).
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.dist.sharding import Parallel
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_parallel(*, multi_pod: bool = False) -> Parallel:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return Parallel(mesh=mesh, data_axes=data_axes, model_axis="model")
+
+
+def make_local_parallel(data: int = 2, model: int = 4) -> Parallel:
+    """Small mesh over host devices (tests)."""
+    mesh = jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return Parallel(mesh=mesh, data_axes=("data",), model_axis="model")

@@ -1,0 +1,70 @@
+"""Production serving launcher: the Pimba system loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
+        --smoke-size --requests 12 --slots 4 --state-format mx8
+
+Weights come from --ckpt-dir (a training checkpoint) or random init.
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke-size", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-capacity", type=int, default=256)
+    ap.add_argument("--state-format", default="mx8",
+                    choices=["mx8", "int8", "fp16", "fp32"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config, get_smoke_config
+    from repro.core.state_update import StateQuantConfig
+    from repro.models import model as M
+    from repro.serving.engine import EngineConfig, Request, ServingEngine
+    from repro.serving.sampler import SamplingConfig
+
+    cfg = (get_smoke_config(args.arch) if args.smoke_size
+           else get_config(args.arch))
+    if cfg.encoder_only:
+        raise SystemExit(f"{cfg.name} is encoder-only: nothing to serve")
+    backend = "pallas" if args.state_format == "mx8" else "jnp"
+    cfg = cfg.with_(state_quant=StateQuantConfig(
+        fmt=args.state_format, rounding="stochastic", backend=backend))
+
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir)
+        restored, step = mgr.restore({"params": params, "opt_state": None})
+        params = restored["params"]
+        print(f"loaded checkpoint step {step}")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        slots=args.slots, cache_capacity=args.cache_capacity,
+        sampling=SamplingConfig(temperature=args.temperature, top_k=40)))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 8 + i % 24).astype(np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
+    done = eng.run()
+    stats = eng.stats()
+    print(f"{len(done)} requests, {stats['tokens']} tokens, "
+          f"{stats['tokens_per_s']:.1f} tok/s "
+          f"(wall {time.perf_counter()-t0:.1f}s, state={args.state_format})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

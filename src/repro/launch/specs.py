@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input: the dry-run contract.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable SDS trees --
+no device allocation ever happens for full-size configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+
+def batch_struct(cfg: ModelConfig, sc: ShapeConfig,
+                 dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs of train/prefill steps."""
+    B, S = sc.global_batch, sc.seq_len
+    i32 = jnp.int32
+    if cfg.family == "vlm":
+        S_text = S - cfg.prefix_len
+        return {
+            "patches": jax.ShapeDtypeStruct((B, cfg.prefix_len,
+                                             cfg.frontend_dim), dtype),
+            "tokens": jax.ShapeDtypeStruct((B, S_text), i32),
+            "targets": jax.ShapeDtypeStruct((B, S_text), i32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), dtype),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "targets": jax.ShapeDtypeStruct((B, S), i32),
+    }
+
+
+def decode_struct(cfg: ModelConfig, sc: ShapeConfig) -> Tuple:
+    """(tokens, lengths, caches) SDS for a decode step with a warm cache of
+    sc.seq_len positions."""
+    B = sc.global_batch
+    cap = -(-sc.seq_len // 128) * 128
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((B,), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: M.init_decode_caches(cfg, B, cap))
+    return tokens, lengths, caches
+
+
+def params_struct(cfg: ModelConfig, key=None) -> Any:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: M.init_model(k, cfg), key)

@@ -1,0 +1,507 @@
+"""Model assembly: block patterns, scan-over-layers, train/prefill/decode.
+
+A model is a repeating ``pattern`` of mixer blocks (attn | mla | mamba2 | gla
+| retnet | hgrn2 | mlstm | slstm), optionally followed by a weight-shared
+attention block per group (Zamba2).  Parameters of the repeating groups are
+stacked along a leading axis and executed with ``jax.lax.scan`` so the HLO
+is O(1) in depth (MaxText-style), with per-group remat.
+
+Three step kinds (matching the benchmark shapes):
+  * train   -- full-sequence forward + chunked-CE loss
+  * prefill -- full-sequence forward that also builds the decode caches
+               (quantized KV / recurrent state), returns last-position logits
+  * decode  -- one token through the quantized caches (the Pimba fast path)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention_cache as AC
+from repro.core import formats as F
+from repro.models import attention as ATT
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+
+Params = dict
+
+_SSM_KINDS = ("mamba2", "gla", "retnet", "hgrn2", "mlstm", "slstm")
+_NO_FFN = ("mamba2", "mlstm", "slstm")   # blocks with internal expansion
+_SEED_STRIDE = 1000003
+
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.ffn_kind != "none" and kind not in _NO_FFN
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_element(key, cfg: ModelConfig, kind: str, layer_idx: int,
+                  dense_ffn: bool = False) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {"norm": L.init_norm(cfg.d_model, cfg.norm_kind, dt)}
+    if kind == "attn":
+        p["mixer"] = ATT.init_attention(k1, cfg)
+    elif kind == "mla":
+        p["mixer"] = ATT.init_mla(k1, cfg)
+    elif kind == "mamba2":
+        p["mixer"] = SSM.init_mamba2(k1, cfg)
+    elif kind in ("gla", "retnet", "hgrn2"):
+        p["mixer"] = SSM.init_gla_family(k1, cfg, kind)
+        if kind == "hgrn2":  # depth-dependent forget-gate lower bound
+            p["mixer"]["beta"] = jnp.array(
+                [layer_idx / max(cfg.n_layers, 1)], jnp.float32)
+    elif kind == "mlstm":
+        p["mixer"] = SSM.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["mixer"] = SSM.init_slstm(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, kind):
+        kf, kff = jax.random.split(k2)
+        p["ffn_norm"] = L.init_norm(cfg.d_model, cfg.norm_kind, dt)
+        if cfg.ffn_kind == "moe":
+            if dense_ffn:
+                p["ffn"] = L.init_ffn(
+                    kff, cfg, d_ff=cfg.moe.first_dense_ff or cfg.moe.d_expert)
+            else:
+                p["ffn"] = L.init_moe(kff, cfg)
+        elif dense_ffn:
+            p["ffn"] = L.init_ffn(kff, cfg)
+        else:
+            p["ffn"] = L.init_ffn(kff, cfg)
+    return p
+
+
+def _init_shared_block(key, cfg: ModelConfig) -> Params:
+    """Zamba2-style shared attention + MLP block."""
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": L.init_norm(cfg.d_model, cfg.norm_kind, dt),
+        "attn": ATT.init_attention(k1, cfg),
+        "ffn_norm": L.init_norm(cfg.d_model, cfg.norm_kind, dt),
+        "ffn": L.init_ffn(k2, cfg),
+    }
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_groups + 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Params = {}
+    if cfg.frontend is None:
+        params["embed"] = L.embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dt)
+    else:
+        params["frontend_proj"] = L.dense_init(
+            keys[-1], cfg.frontend_dim, cfg.d_model, dt)
+        if cfg.frontend == "patch":   # VLM also embeds text tokens
+            params["embed"] = L.embed_init(
+                keys[-2], cfg.vocab_size, cfg.d_model, dt)
+    if cfg.pos_emb == "learned":
+        params["pos"] = L.embed_init(keys[-3], 32768, cfg.d_model, dt)
+
+    if cfg.prelude:
+        pks = jax.random.split(keys[-6], len(cfg.prelude))
+        params["prelude"] = tuple(
+            _init_element(pks[i], cfg, kind, i, dense_ffn=True)
+            for i, kind in enumerate(cfg.prelude))
+
+    # stacked group params
+    if cfg.n_groups == 1:
+        groups = [tuple(_init_element(kk, cfg, kind, pos)
+                        for pos, (kk, kind) in enumerate(
+                            zip(jax.random.split(keys[0], len(cfg.pattern)),
+                                cfg.pattern)))]
+        params["groups"] = jax.tree.map(lambda x: x[None], groups[0])
+    else:
+        def one_group(key, gidx):
+            eks = jax.random.split(key, len(cfg.pattern))
+            return tuple(
+                _init_element(eks[i], cfg, kind, int(gidx) * len(cfg.pattern) + i)
+                for i, kind in enumerate(cfg.pattern))
+        gs = [one_group(keys[g], g) for g in range(cfg.n_groups)]
+        params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+
+    if cfg.shared_attn:
+        params["shared"] = _init_shared_block(keys[-4], cfg)
+    params["final_norm"] = L.init_norm(cfg.d_model, cfg.norm_kind, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-5], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def _lm_head(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _element_forward(p: Params, x, cfg: ModelConfig, kind: str,
+                     positions, prefix_len: int, want_cache: bool,
+                     mesh_axes) -> Tuple[jnp.ndarray, Any]:
+    h = L.apply_norm(p["norm"], x, cfg.norm_kind, cfg.norm_eps)
+    cache = None
+    if kind == "attn":
+        y = ATT.attention_forward(p["mixer"], h, cfg, positions,
+                                  prefix_len=prefix_len)
+        if want_cache:
+            kv = ATT.attention_prefill_kv(p["mixer"], h, cfg, positions)
+            cache = _build_kv_cache(kv[0], kv[1], cfg)
+    elif kind == "mla":
+        y = ATT.mla_forward(p["mixer"], h, cfg, positions)
+        if want_cache:
+            ckv = ATT._mla_cache_stream(p["mixer"], h, cfg, positions)
+            cache = _build_kv_cache(ckv[:, :, None, :], None, cfg,
+                                    v_width=cfg.mla.kv_lora)
+    elif kind == "mamba2":
+        y, st = SSM.mamba2_forward(p["mixer"], h, cfg, par=mesh_axes)
+        cache = st if want_cache else None
+    elif kind in ("gla", "retnet", "hgrn2"):
+        y, st = SSM.gla_family_forward(p["mixer"], h, cfg, kind, par=mesh_axes)
+        cache = st if want_cache else None
+    elif kind == "mlstm":
+        y, st = SSM.mlstm_forward(p["mixer"], h, cfg, par=mesh_axes)
+        cache = st if want_cache else None
+    elif kind == "slstm":
+        y, st = SSM.slstm_forward(p["mixer"], h, cfg, par=mesh_axes)
+        cache = st if want_cache else None
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if _has_ffn(cfg, kind):
+        h = L.apply_norm(p["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        if cfg.ffn_kind == "moe" and "router" in p["ffn"]:
+            y = L.apply_moe(p["ffn"], h, cfg, mesh_axes)
+        elif cfg.ffn_kind == "moe":
+            y = L.apply_ffn(p["ffn"], h, cfg.ffn_kind_inner)
+        else:
+            y = L.apply_ffn(p["ffn"], h, cfg.ffn_kind)
+        x = x + y
+    return x, cache
+
+
+def _build_kv_cache(k: jnp.ndarray, v: Optional[jnp.ndarray],
+                    cfg: ModelConfig, v_width: Optional[int] = None
+                    ) -> AC.KVCache:
+    """Quantize full-sequence K/V into a cache with tile-aligned capacity."""
+    B, S = k.shape[:2]
+    cap = -(-S // 128) * 128
+    pad = cap - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+        if v is not None:
+            v = jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+    sq = cfg.state_quant
+    lengths = jnp.full((B,), S, jnp.int32)
+    if sq.quantized:
+        qk = F.quantize(k, sq.fmt)
+        qv = None if v is None else F.quantize(v, sq.fmt)
+        return AC.KVCache(qk, qv, lengths, sq.fmt, v_width)
+    dt = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "fp16": jnp.float16}[sq.fmt]
+    return AC.KVCache(k.astype(dt), None if v is None else v.astype(dt),
+                      lengths, sq.fmt, v_width)
+
+
+def _shared_block_forward(p: Params, x, cfg: ModelConfig, positions,
+                          prefix_len: int, want_cache: bool):
+    h = L.apply_norm(p["norm"], x, cfg.norm_kind, cfg.norm_eps)
+    y = ATT.attention_forward(p["attn"], h, cfg, positions,
+                              prefix_len=prefix_len)
+    cache = None
+    if want_cache:
+        kv = ATT.attention_prefill_kv(p["attn"], h, cfg, positions)
+        cache = _build_kv_cache(kv[0], kv[1], cfg)
+    x = x + y
+    h = L.apply_norm(p["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return x + L.apply_ffn(p["ffn"], h, cfg.ffn_kind), cache
+
+
+def _seq_shard(x: jnp.ndarray, par) -> jnp.ndarray:
+    """Sequence-parallel constraint on the layer-boundary activations.
+
+    The scan-over-layers carry is the dominant saved residual of the
+    backward pass; sharding its sequence dim over the 'model' axis
+    (Megatron-SP style) divides that memory by TP.  GSPMD inserts the
+    all-gather at attention entry / reduce-scatter at exit.
+    """
+    if par is None or not hasattr(par, "mesh"):
+        return x
+    B, S = x.shape[:2]
+    if S <= 1 or S % par.tp != 0 or B % par.batch_size_divisor != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, par.named(P(par.batch_axes, par.model_axis, None)))
+
+
+def _run_blocks(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                positions, prefix_len: int, want_cache: bool,
+                mesh_axes) -> Tuple[jnp.ndarray, Any]:
+    shared = params.get("shared")
+    if cfg.seq_parallel:
+        x = _seq_shard(x, mesh_axes)
+
+    prelude_caches = []
+    for i, kind in enumerate(cfg.prelude):
+        x, c = _element_forward(params["prelude"][i], x, cfg, kind, positions,
+                                prefix_len, want_cache, mesh_axes)
+        prelude_caches.append(c)
+
+    def _maybe_ckpt(fn):
+        # nested remat: one element's backward lives at a time, so a group
+        # of many elements (zamba2: 6 mamba + shared attn) does not hold
+        # every sublayer's cotangents simultaneously
+        return jax.checkpoint(fn, prevent_cse=False) if cfg.remat else fn
+
+    def group_body(x, ginp):
+        gparams, gidx = ginp
+        if cfg.seq_parallel:
+            x = _seq_shard(x, mesh_axes)
+        caches = []
+        for pos, kind in enumerate(cfg.pattern):
+            fn = _maybe_ckpt(
+                lambda p, xx, kind=kind: _element_forward(
+                    p, xx, cfg, kind, positions, prefix_len, want_cache,
+                    mesh_axes))
+            x, c = fn(gparams[pos], x)
+            caches.append(c)
+        if shared is not None:
+            fn = _maybe_ckpt(
+                lambda p, xx: _shared_block_forward(
+                    p, xx, cfg, positions, prefix_len, want_cache))
+            x, c = fn(shared, x)
+            caches.append(c)
+        return x, tuple(caches)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(
+            body, x, (params["groups"], jnp.arange(cfg.n_groups)))
+    else:
+        caches_all = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            x, cs = body(x, (gp, g))
+            caches_all.append(cs)
+        caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches_all)
+                  if want_cache else None)
+    if cfg.prelude and want_cache:
+        caches = {"prelude": tuple(prelude_caches), "groups": caches}
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Returns (x, positions, prefix_len)."""
+    if cfg.frontend == "patch":           # VLM: [patch embeds ; text tokens]
+        patches = batch["patches"] @ params["frontend_proj"]
+        tok = params["embed"][batch["tokens"]]
+        x = jnp.concatenate([patches, tok], axis=1)
+        prefix_len = patches.shape[1]
+    elif cfg.frontend == "audio_frames":  # audio: precomputed conv features
+        x = batch["frames"] @ params["frontend_proj"]
+        prefix_len = 0
+    else:
+        x = params["embed"][batch["tokens"]]
+        prefix_len = cfg.prefix_len
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.pos_emb == "learned":
+        x = x + params["pos"][positions]
+    elif cfg.pos_emb == "sincos":
+        x = x + L.sincos_pos_emb(S, cfg.d_model, x.dtype)[None]
+    return x, positions, prefix_len
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+               mesh_axes=None) -> jnp.ndarray:
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    x, _ = _run_blocks(params, x, cfg, positions, prefix_len,
+                       want_cache=False, mesh_axes=mesh_axes)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    labels = batch["targets"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    if cfg.frontend == "patch":
+        # loss over text positions only; hidden states are offset by prefix
+        x = x[:, -labels.shape[1]:]
+    return L.chunked_softmax_xent(x, _lm_head(params, cfg), labels,
+                                  mask.astype(jnp.float32), cfg.logit_chunk,
+                                  unroll=cfg.cost_probe)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            mesh_axes=None) -> Tuple[jnp.ndarray, Any]:
+    """Full-sequence forward; returns (last-position logits, caches)."""
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    x, caches = _run_blocks(params, x, cfg, positions, prefix_len,
+                            want_cache=not cfg.encoder_only,
+                            mesh_axes=mesh_axes)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    if cfg.encoder_only:
+        # encoder models: per-position classification logits
+        logits = x @ _lm_head(params, cfg)
+        return logits, None
+    logits = x[:, -1] @ _lm_head(params, cfg)
+    return logits, caches
+
+
+def init_decode_caches(cfg: ModelConfig, B: int, cache_capacity: int) -> Any:
+    """Zeroed caches for decode-from-scratch (dry-run decode cells)."""
+    def one_element(kind):
+        if kind == "attn":
+            return AC.init_kv_cache(B, cache_capacity, cfg.n_kv_heads,
+                                    cfg.head_dim, cfg.state_quant)
+        if kind == "mla":
+            return AC.init_kv_cache(B, cache_capacity, 1,
+                                    cfg.mla.cache_width, cfg.state_quant,
+                                    mla_v_width=cfg.mla.kv_lora)
+        if kind == "mamba2":
+            return SSM.mamba2_init_state(B, cfg)
+        if kind in ("gla", "retnet", "hgrn2"):
+            return SSM.gla_family_init_state(B, cfg)
+        if kind == "mlstm":
+            return SSM.mlstm_init_state(B, cfg)
+        if kind == "slstm":
+            return SSM.slstm_init_state(B, cfg)
+        raise ValueError(kind)
+
+    per_group = [one_element(k) for k in cfg.pattern]
+    if cfg.shared_attn:
+        per_group.append(AC.init_kv_cache(B, cache_capacity, cfg.n_kv_heads,
+                                          cfg.head_dim, cfg.state_quant))
+    # lengths: how many positions already in the caches
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
+        tuple(per_group))
+    if cfg.prelude:
+        return {"prelude": tuple(one_element(k) for k in cfg.prelude),
+                "groups": stacked}
+    return stacked
+
+
+def set_cache_lengths(caches: Any, lengths: jnp.ndarray) -> Any:
+    """Overwrite every KVCache.lengths leaf (e.g. decode over a warm cache)."""
+    def fix(c):
+        if isinstance(c, AC.KVCache):
+            return AC.KVCache(c.k, c.v, jnp.broadcast_to(lengths, c.lengths.shape),
+                              c.fmt, c.v_width)
+        return c
+    return jax.tree.map(fix, caches,
+                        is_leaf=lambda x: isinstance(x, AC.KVCache))
+
+
+def _element_decode(p: Params, x, cache, cfg: ModelConfig, kind: str,
+                    positions, seed) -> Tuple[jnp.ndarray, Any]:
+    h = L.apply_norm(p["norm"], x, cfg.norm_kind, cfg.norm_eps)
+    if kind == "attn":
+        y, cache = ATT.attention_decode(p["mixer"], h, cache, cfg,
+                                        positions[:, None], seed)
+    elif kind == "mla":
+        y, cache = ATT.mla_decode(p["mixer"], h, cache, cfg,
+                                  positions[:, None], seed)
+    elif kind == "mamba2":
+        y, cache = SSM.mamba2_decode(p["mixer"], h, cache, cfg, seed)
+    elif kind in ("gla", "retnet", "hgrn2"):
+        y, cache = SSM.gla_family_decode(p["mixer"], h, cache, cfg, kind, seed)
+    elif kind == "mlstm":
+        y, cache = SSM.mlstm_decode(p["mixer"], h, cache, cfg, seed)
+    elif kind == "slstm":
+        y, cache = SSM.slstm_decode(p["mixer"], h, cache, cfg, seed)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if _has_ffn(cfg, kind):
+        h = L.apply_norm(p["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        if cfg.ffn_kind == "moe" and "router" in p["ffn"]:
+            y = L.apply_moe(p["ffn"], h, cfg, None)
+        elif cfg.ffn_kind == "moe":
+            y = L.apply_ffn(p["ffn"], h, cfg.ffn_kind_inner)
+        else:
+            y = L.apply_ffn(p["ffn"], h, cfg.ffn_kind)
+        x = x + y
+    return x, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                caches: Any, lengths: jnp.ndarray, seed=0,
+                mesh_axes=None) -> Tuple[jnp.ndarray, Any]:
+    """One decode step.  tokens: (B,) int32; lengths: (B,) positions so far.
+
+    Returns (logits (B, V), new caches).
+    """
+    assert not cfg.encoder_only, f"{cfg.name} is encoder-only: no decode step"
+    x = params["embed"][tokens][:, None]                       # (B,1,d)
+    positions = lengths
+    if cfg.pos_emb == "learned":
+        x = x + params["pos"][positions][:, None]
+    shared = params.get("shared")
+
+    if cfg.prelude:
+        prelude_caches, caches = caches["prelude"], caches["groups"]
+        new_prelude = []
+        for i, kind in enumerate(cfg.prelude):
+            x, c = _element_decode(params["prelude"][i], x, prelude_caches[i],
+                                   cfg, kind, positions,
+                                   jnp.uint32(seed) + jnp.uint32(7919 * (i + 1)))
+            new_prelude.append(c)
+
+    def group_body(x, ginp):
+        gparams, gcaches, gidx = ginp
+        seed_g = jnp.uint32(seed) + gidx.astype(jnp.uint32) * jnp.uint32(_SEED_STRIDE)
+        new_caches = []
+        for pos, kind in enumerate(cfg.pattern):
+            x, c = _element_decode(gparams[pos], x, gcaches[pos], cfg, kind,
+                                   positions, seed_g + jnp.uint32(pos + 1))
+            new_caches.append(c)
+        if shared is not None:
+            h = L.apply_norm(shared["norm"], x, cfg.norm_kind, cfg.norm_eps)
+            y, c = ATT.attention_decode(shared["attn"], h, gcaches[-1], cfg,
+                                        positions[:, None],
+                                        seed_g + jnp.uint32(99))
+            x = x + y
+            h = L.apply_norm(shared["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + L.apply_ffn(shared["ffn"], h, cfg.ffn_kind)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(
+            group_body, x, (params["groups"], caches, jnp.arange(cfg.n_groups)))
+    else:
+        ncs = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            gc = jax.tree.map(lambda a: a[g], caches,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray))
+            x, cs = group_body(x, (gp, gc, jnp.asarray(g)))
+            ncs.append(cs)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+
+    if cfg.prelude:
+        new_caches = {"prelude": tuple(new_prelude), "groups": new_caches}
+    x = L.apply_norm(params["final_norm"], x[:, 0], cfg.norm_kind, cfg.norm_eps)
+    logits = x @ _lm_head(params, cfg)
+    return logits, new_caches

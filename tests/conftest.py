@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; only the
+# dry-run module requests 512 placeholder devices (and only in its own
+# process).  Tests that need a small multi-device mesh spawn subprocesses
+# (see test_sharding.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

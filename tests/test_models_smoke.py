@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests: reduced configs, one train/forward step on
+CPU, asserting output shapes and no NaNs (spec requirement), plus the
+prefill->decode consistency check on the unquantized path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config, get_smoke_config
+from repro.core.state_update import StateQuantConfig
+from repro.models import model as M
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.family == "vlm":
+        return {
+            "patches": jax.random.normal(key, (B, cfg.prefix_len,
+                                               cfg.frontend_dim)),
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.frontend_dim)),
+            "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.train_loss(p, cfg, batch))(params)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert 0.0 < float(loss) < 20.0
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.encoder_only:
+        pytest.skip("encoder-only: no decode step")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    logits, caches = M.prefill(params, cfg, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    lengths = jnp.full((B,), S + (cfg.prefix_len if cfg.family == "vlm" else 0),
+                       jnp.int32)
+    caches = M.set_cache_lengths(caches, lengths)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for step in range(3):
+        logits, caches = M.decode_step(params, cfg, tok, caches,
+                                       lengths + step, seed=step)
+        assert jnp.all(jnp.isfinite(logits)), f"{arch}: decode NaN"
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-2.7b", "zamba2-2.7b",
+                                  "deepseek-v2-236b", "xlstm-1.3b"])
+def test_prefill_decode_consistency_unquantized(arch):
+    """With an fp32 cache, decoding position S from the prefill caches must
+    match the full-forward logits at position S (teacher forcing)."""
+    cfg = get_smoke_config(arch).with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    if cfg.moe is not None:
+        # capacity-based MoE drops tokens under load; prefill (S tokens) and
+        # decode (1 token) then see different drop patterns, which is the
+        # expected inference semantics -- neutralize it for this check
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = M.init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 1, 33
+    batch = _batch(cfg, B, S)
+    # full forward over S tokens: logits at position S-1 predict token S
+    logits_full, _ = M.prefill(params, cfg, batch)
+    # prefill S-1 tokens, decode token S-1
+    batch_head = {k: (v[:, :S - 1] if v.ndim >= 2 and v.shape[1] == S else v)
+                  for k, v in batch.items()}
+    _, caches = M.prefill(params, cfg, batch_head)
+    lengths = jnp.full((B,), S - 1 + (cfg.prefix_len if cfg.family == "vlm" else 0),
+                       jnp.int32)
+    caches = M.set_cache_lengths(caches, lengths)
+    logits_dec, _ = M.decode_step(params, cfg, batch["tokens"][:, S - 1],
+                                  caches, lengths, seed=0)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-2.7b"])
+def test_quantized_decode_close_to_unquantized(arch):
+    """MX8 caches perturb decode logits only mildly (Table 2 at smoke scale)."""
+    outs = {}
+    for fmt in ("fp32", "mx8"):
+        cfg = get_smoke_config(arch).with_(
+            state_quant=StateQuantConfig(fmt=fmt, rounding="stochastic",
+                                         backend="jnp"))
+        params = M.init_model(jax.random.PRNGKey(2), cfg)
+        batch = _batch(cfg, 1, 32, seed=3)
+        logits, caches = M.prefill(params, cfg, batch)
+        lengths = jnp.full((1,), 32, jnp.int32)
+        caches = M.set_cache_lengths(caches, lengths)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, _ = M.decode_step(params, cfg, tok, caches, lengths, seed=0)
+        outs[fmt] = np.asarray(logits2)
+    cos = (outs["fp32"] * outs["mx8"]).sum() / (
+        np.linalg.norm(outs["fp32"]) * np.linalg.norm(outs["mx8"]))
+    assert cos > 0.99, cos
+
+
+def test_full_configs_instantiate_abstractly():
+    """Every FULL config builds its parameter tree abstractly (no memory)."""
+    from repro.launch import specs as SP
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch).with_(param_dtype="bfloat16")
+        shapes = SP.params_struct(cfg)
+        n = sum(np.prod(l.shape) for l in jax.tree.leaves(shapes))
+        assert n > 1e8, f"{arch}: suspiciously small ({n:.2e} params)"
+
+
+def test_param_counts_match_public_sizes():
+    """Full configs land near their nameplate parameter counts."""
+    import repro.launch.specs as SP
+    expected = {
+        "yi-9b": (8.0e9, 10.5e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "yi-34b": (32e9, 36e9),
+        "smollm-360m": (0.3e9, 0.45e9),
+        # the assigned config line (48L, d=2048, 4H, proj-factor-2 mLSTM)
+        # lands at ~1.9B with the standard parameterization
+        "xlstm-1.3b": (1.2e9, 2.2e9),
+        "deepseek-v2-236b": (220e9, 250e9),
+        "dbrx-132b": (125e9, 140e9),
+        "zamba2-2.7b": (2.2e9, 3.2e9),
+        "paligemma-3b": (2.3e9, 3.5e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        shapes = SP.params_struct(cfg)
+        n = float(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params not in [{lo/1e9}, {hi/1e9}]"

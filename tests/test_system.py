@@ -1,0 +1,141 @@
+"""End-to-end behaviour + hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attention_cache as AC
+from repro.core import formats as F
+from repro.core import state_update as SU
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 algebraic invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([(16, 16), (32, 16), (16, 48)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, st.integers(0, 2**16))
+def test_state_update_zero_decay_resets(dkdv, seed):
+    """d=0 forgets the old state entirely: S' = k vᵀ exactly."""
+    dk, dv = dkdv
+    ks = jax.random.split(jax.random.PRNGKey(seed % 997), 4)
+    S0 = jax.random.normal(ks[0], (1, 1, dv, dk))
+    k = jax.random.normal(ks[1], (1, 1, dk))
+    v = jax.random.normal(ks[2], (1, 1, dv))
+    q = jax.random.normal(ks[3], (1, 1, dk))
+    Sn, y = ops.state_update_float(S0, jnp.zeros((1, 1, 1)), k, v, q,
+                                   dtype=jnp.float32)
+    expect = v[0, 0][:, None] * k[0, 0][None, :]
+    np.testing.assert_allclose(Sn[0, 0], expect, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(y[0, 0], expect @ q[0, 0], rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, st.floats(0.1, 0.99))
+def test_state_update_linearity_in_v(dkdv, decay):
+    """Eq.2 is linear in v: doubling v doubles the rank-1 increment."""
+    dk, dv = dkdv
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    k = jax.random.normal(ks[1], (1, 1, dk))
+    v = jax.random.normal(ks[2], (1, 1, dv))
+    q = jax.random.normal(ks[3], (1, 1, dk))
+    Z = jnp.zeros((1, 1, dv, dk))
+    d = jnp.full((1, 1, 1), decay)
+    S1, _ = ops.state_update_float(Z, d, k, v, q, dtype=jnp.float32)
+    S2, _ = ops.state_update_float(Z, d, k, 2 * v, q, dtype=jnp.float32)
+    np.testing.assert_allclose(2 * S1, S2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**16))
+def test_quantized_update_bounded_drift(seed):
+    """One MX8 step's deviation from the f32 step is bounded by the format's
+    relative error on the state magnitude."""
+    dk = dv = 32
+    ks = jax.random.split(jax.random.PRNGKey(seed % 991), 4)
+    S0 = jax.random.normal(ks[0], (1, 1, dv, dk))
+    d = jax.nn.sigmoid(jax.random.normal(ks[1], (1, 1, dk)))
+    k = jax.random.normal(ks[2], (1, 1, dk))
+    v = jax.random.normal(ks[3], (1, 1, dv))
+    q = jnp.ones((1, 1, dk))
+    cfg = SU.StateQuantConfig()
+    qS = F.mx8_quantize(S0)
+    qn, yq = SU.state_update_step(qS, d, k, v, q, cfg, seed=seed)
+    Sf, yf = ops.state_update_float(F.dequantize(qS), d, k, v, q,
+                                    dtype=jnp.float32)
+    rel = float(jnp.linalg.norm(F.dequantize(qn) - Sf)
+                / jnp.linalg.norm(Sf))
+    assert rel < 0.03, rel
+
+
+# ---------------------------------------------------------------------------
+# KV cache invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6))
+def test_cache_append_then_attend_prefix_invariance(n_tok):
+    """Tokens appended after position L never change attention at length L."""
+    cfg = SU.StateQuantConfig()
+    B, KVH, dh, T = 1, 2, 32, 128
+    cache = AC.init_kv_cache(B, T, KVH, dh, cfg)
+    ks = jax.random.split(jax.random.PRNGKey(n_tok), 3)
+    for i in range(n_tok):
+        kv = jax.random.normal(jax.random.fold_in(ks[0], i), (B, 1, KVH, dh))
+        cache = AC.append(cache, kv, kv, cfg, seed=i)
+    q = jax.random.normal(ks[2], (B, 4, dh))
+    frozen = AC.KVCache(cache.k, cache.v, jnp.full((B,), n_tok), cfg.fmt)
+    y1 = AC.attend(frozen, q, cfg)
+    extra = jax.random.normal(ks[1], (B, 1, KVH, dh)) * 50
+    cache2 = AC.append(cache, extra, extra, cfg, seed=99)
+    frozen2 = AC.KVCache(cache2.k, cache2.v, jnp.full((B,), n_tok), cfg.fmt)
+    y2 = AC.attend(frozen2, q, cfg)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+def test_cache_append_roundtrip_values():
+    cfg = SU.StateQuantConfig()
+    B, KVH, dh, T = 2, 1, 16, 128
+    cache = AC.init_kv_cache(B, T, KVH, dh, cfg)
+    k0 = jnp.ones((B, 1, KVH, dh)) * 0.5
+    cache = AC.append(cache, k0, k0, cfg)
+    kd = F.dequantize(cache.k)
+    np.testing.assert_allclose(kd[:, 0], 0.5, rtol=0.02)
+    assert float(jnp.abs(kd[:, 1:]).max()) == 0.0
+    assert list(np.asarray(cache.lengths)) == [1, 1]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: quantized serving degrades gracefully
+# ---------------------------------------------------------------------------
+
+def test_e2e_quantized_vs_float_generation():
+    """Greedy generations from MX8 and fp32 caches start identically on a
+    random tiny model (logits gaps >> quantization noise)."""
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    toks = {}
+    for fmt in ("fp32", "mx8"):
+        cfg = get_smoke_config("mamba2-2.7b").with_(
+            state_quant=SU.StateQuantConfig(fmt=fmt, rounding="stochastic",
+                                            backend="jnp"))
+        params = M.init_model(jax.random.PRNGKey(7), cfg)
+        prompt = jax.random.randint(jax.random.PRNGKey(8), (1, 16), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": prompt, "targets": prompt}
+        logits, caches = M.prefill(params, cfg, batch)
+        lengths = jnp.full((1,), 16, jnp.int32)
+        caches = M.set_cache_lengths(caches, lengths)
+        seq = [int(jnp.argmax(logits[0]))]
+        for i in range(4):
+            logits, caches = M.decode_step(
+                params, cfg, jnp.asarray([seq[-1]], jnp.int32), caches,
+                lengths + i, seed=i)
+            seq.append(int(jnp.argmax(logits[0])))
+        toks[fmt] = seq
+    assert toks["fp32"] == toks["mx8"], toks
