@@ -194,12 +194,16 @@ def kernel_attention():
 
 
 def serving_throughput():
+    import json
     from repro.configs import get_smoke_config
     from repro.models import model as M
-    from repro.serving.engine import EngineConfig, Request, ServingEngine
+    from repro.serving.engine import (EngineConfig, PagedEngineConfig,
+                                      PagedServingEngine, Request,
+                                      ServingEngine)
     cfg = get_smoke_config("mamba2-2.7b")
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
+    artifact = {}
     for slots in (1, 4):
         eng = ServingEngine(params, cfg,
                             EngineConfig(slots=slots, cache_capacity=128))
@@ -212,8 +216,34 @@ def serving_throughput():
         done = eng.run()
         dt = time.perf_counter() - t0
         toks = sum(len(r.output) for r in done)
+        stats = eng.stats()
+        artifact[f"slots{slots}"] = stats
         emit(f"serving/slots{slots}", dt / max(toks, 1) * 1e6,
-             f"tokens_per_s={toks/dt:.2f};requests={len(done)}")
+             f"tokens_per_s={toks/dt:.2f};requests={len(done)};"
+             f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f}")
+    # paged pool: same decode batch, mixed prompt lengths, occupancy column
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=4, n_pages=9, n_slabs=9, prefill_chunk=128))
+    for i in range(8):
+        n = 8 + i % 8 if i % 2 else 40 + i
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, n
+                                               ).astype(np.int32),
+                           max_new_tokens=8))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    stats = eng.stats()
+    stats["bank_report"] = eng.bank_report()
+    artifact["paged"] = stats
+    emit("serving/paged", dt / max(toks, 1) * 1e6,
+         f"tokens_per_s={toks/dt:.2f};requests={len(done)};"
+         f"occupancy={stats['occupancy']:.2f};"
+         f"fragmentation={stats['fragmentation']:.2f};"
+         f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f}")
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(artifact, f, indent=2, default=float)
 
 
 BENCHES = [fig3_latency_breakdown, fig4_swamping, fig5a_pim_designs,

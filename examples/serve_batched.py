@@ -28,6 +28,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--state-format", default="mx8",
                     choices=["mx8", "int8", "fp16", "fp32"])
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged, bank-aware state/KV pool")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).with_(
@@ -36,10 +38,16 @@ def main():
                                      backend="pallas" if args.state_format ==
                                      "mx8" else "jnp"))
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(params, cfg,
-                        EngineConfig(slots=args.slots, cache_capacity=128,
-                                     sampling=SamplingConfig(temperature=0.8,
-                                                             top_k=40)))
+    sampling = SamplingConfig(temperature=0.8, top_k=40, top_p=0.95)
+    if args.paged:
+        from repro.serving.engine import PagedEngineConfig, PagedServingEngine
+        eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+            max_decode_batch=args.slots, n_pages=2 * args.slots + 1,
+            n_slabs=2 * args.slots + 1, sampling=sampling))
+    else:
+        eng = ServingEngine(params, cfg,
+                            EngineConfig(slots=args.slots, cache_capacity=128,
+                                         sampling=sampling))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(rid=i,

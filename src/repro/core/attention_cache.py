@@ -32,11 +32,13 @@ class KVCache:
     lengths: jnp.ndarray
     fmt: str = "mx8"
     v_width: Optional[int] = None     # MLA only
+    time_axis: int = 1                # time dim in the logical (B, T, ...) layout
 
     def tree_flatten_with_keys(self):
         GK = jax.tree_util.GetAttrKey
         return ([(GK("k"), self.k), (GK("v"), self.v),
-                 (GK("lengths"), self.lengths)], (self.fmt, self.v_width))
+                 (GK("lengths"), self.lengths)],
+                (self.fmt, self.v_width, self.time_axis))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -46,7 +48,17 @@ class KVCache:
     @property
     def max_len(self) -> int:
         shape = self.k.shape
-        return shape[1]
+        return shape[self.time_axis]
+
+    @property
+    def stack_offset(self) -> int:
+        """How many group-stack axes prefix the logical layout.
+
+        Leaves of a scanned model are stacked (G, B, T, ...) while the cache's
+        logical layout stays (B, T, ...); ``lengths`` is logically (B,), so any
+        extra leading axes on it are the stack depth.
+        """
+        return self.lengths.ndim - 1
 
 
 def init_kv_cache(B: int, T: int, KVH: int, dk: int,
@@ -98,7 +110,52 @@ def append(cache: KVCache, k_new: jnp.ndarray,
         nk = _update_at(cache.k, k_new, cache.lengths)
         nv = None if v_new is None else _update_at(cache.v, v_new, cache.lengths)
     n = k_new.shape[1]
-    return KVCache(nk, nv, cache.lengths + n, cache.fmt, cache.v_width)
+    return KVCache(nk, nv, cache.lengths + n, cache.fmt, cache.v_width,
+                   cache.time_axis)
+
+
+def recapacity(caches, capacity: int):
+    """Pad/trim every KV-cache time axis to ``capacity`` (exact, no guessing).
+
+    Works on any pytree containing KVCache nodes, including group-stacked ones
+    ((G, B, T, ...) leaves): the time axis of a leaf is the cache's declared
+    ``time_axis`` shifted by the stack depth read off ``lengths``.  Quantized
+    payload leaves all share the stacked layout, so one shift applies to every
+    payload field.
+    """
+    assert capacity % 128 == 0, "cache capacity must be tile-aligned"
+
+    def fix(c):
+        if not isinstance(c, KVCache):
+            return c
+        ax = c.stack_offset + c.time_axis
+
+        def pad_t(leaf):
+            T = leaf.shape[ax]
+            if T == capacity:
+                return leaf
+            if T > capacity:
+                idx = [slice(None)] * leaf.ndim
+                idx[ax] = slice(0, capacity)
+                return leaf[tuple(idx)]
+            pad = [(0, 0)] * leaf.ndim
+            pad[ax] = (0, capacity - T)
+            return jnp.pad(leaf, pad)
+
+        def fix_stream(s):
+            if s is None:
+                return None
+            if isinstance(s, F.QuantizedTensor):
+                payload = {f: pad_t(v) for f, v in s.payload.items()}
+                shape = list(s.shape)
+                shape[c.time_axis] = capacity
+                return F.QuantizedTensor(s.fmt, tuple(shape), payload)
+            return pad_t(s)
+
+        return KVCache(fix_stream(c.k), fix_stream(c.v), c.lengths,
+                       c.fmt, c.v_width, c.time_axis)
+
+    return jax.tree.map(fix, caches, is_leaf=lambda x: isinstance(x, KVCache))
 
 
 def attend(cache: KVCache, q: jnp.ndarray, cfg: StateQuantConfig,

@@ -113,39 +113,43 @@ def _bursts_per_device(w: StateWorkload, sys: SystemConfig) -> float:
     return total_bursts / pipes
 
 
+def _cycles_per_burst(h: HBMConfig, design: str) -> float:
+    """Cost of one state sub-chunk (one column burst) on the owning unit.
+
+    * ``time_multiplexed`` -- the non-pipelined unit issues read / decay /
+      outer / add / dot / write as separate serialized micro-ops
+      (6 x tCCD_L) and pays the read->write bus turnaround
+      (tWR/2 + tRTP) per sub-chunk.
+    * ``pipelined`` -- 4-stage per-bank pipeline: compute is hidden, but
+      each sub-chunk still needs a read burst + a write burst on the same
+      bank's row buffer plus write recovery before the next read (tWR).
+    * ``pimba`` -- access interleaving: the SPU's read (upper bank) and the
+      write of the previous result (bottom bank) overlap, so the write
+      burst and its recovery vanish from the critical path -- same
+      throughput as per-bank pipelined with HALF the units (the paper's
+      headline claim is area, throughput is preserved); command scheduling
+      (Fig. 11) removes the operand/result transfer overhead separately.
+    """
+    if design == "time_multiplexed":
+        return 6 * h.tCCD_L + h.tWR / 2 + h.tRTP_L
+    if design in ("pipelined", "pimba"):
+        return 2 * h.tCCD_L + h.tWR
+    raise ValueError(design)
+
+
 def pim_state_update_latency(w: StateWorkload, sys: SystemConfig,
                              design: str) -> float:
     """Latency of the in-PIM state update under the three designs.
 
     Per sub-chunk (one column burst) the SPU must:
       read S, compute decay+outer+add, write S', dot-product for y.
+    Column accesses across a pseudo-channel serialize on I/O gating at
+    tCCD_L; what differs per design is the cost of one state sub-chunk
+    (see :func:`_cycles_per_burst`).
     """
     h = sys.hbm
     bursts = _bursts_per_device(w, sys)       # per pseudo-channel
-    # Column accesses across a pseudo-channel serialize on I/O gating at
-    # tCCD_L.  What differs per design is the cost of one state sub-chunk:
-    if design == "time_multiplexed":
-        # the non-pipelined unit issues read / decay / outer / add / dot /
-        # write as separate serialized micro-ops (6 x tCCD_L) and pays the
-        # read->write bus turnaround (tWR/2 + tRTP) per sub-chunk
-        cycles_per_burst = 6 * h.tCCD_L + h.tWR / 2 + h.tRTP_L
-    elif design == "pipelined":
-        # 4-stage per-bank pipeline: compute is hidden, but each sub-chunk
-        # still needs a read burst + a write burst on the same bank's row
-        # buffer plus write recovery before the next read (tWR)
-        cycles_per_burst = 2 * h.tCCD_L + h.tWR
-    elif design == "pimba":
-        # access interleaving: the SPU's read (upper bank) and the write of
-        # the previous result (bottom bank) overlap, so the write burst and
-        # its recovery vanish from the critical path -- same throughput as
-        # per-bank pipelined with HALF the units (paper's headline claim is
-        # area, throughput is preserved), and command scheduling (Fig. 11)
-        # removes the operand/result transfer overhead below.
-        cycles_per_burst = 2 * h.tCCD_L + h.tWR
-    else:
-        raise ValueError(design)
-
-    compute_cycles = bursts * cycles_per_burst
+    compute_cycles = bursts * _cycles_per_burst(h, design)
     # row activate/precharge + operand (REG_WRITE) / result (RESULT_READ)
     # transfer overheads; Pimba hides them inside tFAW/tRP windows.
     rows = w.state_bytes / (h.row_bytes * sys.n_stacks * h.pseudo_channels)
@@ -153,6 +157,46 @@ def pim_state_update_latency(w: StateWorkload, sys: SystemConfig,
     operand_cycles = 0.0 if design == "pimba" else bursts * h.tCCD_L * 0.5
     total_cycles = compute_cycles + row_overhead + operand_cycles
     return total_cycles * h.cycle_s
+
+
+def placement_step_latency(bursts: "np.ndarray", sys: SystemConfig,
+                           design: str = "pimba") -> Dict[str, float]:
+    """Bank-conflict-aware latency of one decode step for a *real* page map.
+
+    ``bursts`` is a (pseudo_channels, bank_pairs) array of column bursts the
+    step issues against each bank pair -- produced by the paged pool's
+    placement bookkeeping (``PagedStatePool.bank_traffic``), i.e. actual
+    allocations rather than the idealized uniform traffic the closed-form
+    model above assumes.
+
+    Two serialization points govern the step:
+
+      * each SPU (one per bank pair) retires its own bursts at
+        ``cycles_per_burst(design)`` -- a hot bank pair is a straggler;
+      * all bursts of a pseudo-channel share its I/O gating and serialize at
+        ``tCCD_L`` -- a hot pseudo-channel bounds the step even when its
+        pairs are individually balanced.
+
+    Returns real vs. ideal (same total traffic, perfectly spread) latency
+    and their ratio: ``conflict_factor`` = 1.0 means the placement costs
+    nothing; the fixed-slot pool's clustered allocations score worse.
+    """
+    h = sys.hbm
+    bursts = np.asarray(bursts, float)
+    cpb = _cycles_per_burst(h, design)
+    pair_cycles = bursts * cpb                          # SPU-bound
+    bus_cycles = bursts.sum(axis=1) * h.tCCD_L          # pch I/O gating
+    per_pch = np.maximum(bus_cycles, pair_cycles.max(axis=1, initial=0.0))
+    t_real = float(per_pch.max(initial=0.0) * h.cycle_s)
+
+    total = bursts.sum()
+    n_pch, n_pairs = bursts.shape
+    uniform_pair = total / (n_pch * n_pairs)
+    uniform_bus = total / n_pch
+    t_ideal = float(max(uniform_pair * cpb, uniform_bus * h.tCCD_L)
+                    * h.cycle_s)
+    return {"t_real_s": t_real, "t_ideal_s": t_ideal,
+            "conflict_factor": t_real / t_ideal if t_ideal > 0 else 1.0}
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,15 @@
 """Production serving launcher: the Pimba system loop.
 
+Fixed-slot pool (legacy):
+
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
         --smoke-size --requests 12 --slots 4 --state-format mx8
+
+Paged, bank-aware pool with the preempting scheduler:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --smoke-size --paged --pages 33 --requests 16 --mixed \
+        --policy priority --top-p 0.95 --seed 7
 
 Weights come from --ckpt-dir (a training checkpoint) or random init.
 """
@@ -22,6 +30,24 @@ def main(argv=None):
     ap.add_argument("--state-format", default="mx8",
                     choices=["mx8", "int8", "fp16", "fp32"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed for reproducible runs")
+    # paged pool + scheduler
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged, bank-aware state/KV pool")
+    ap.add_argument("--pages", type=int, default=33,
+                    help="pool size in 128-token pages (incl. 1 scratch)")
+    ap.add_argument("--slabs", type=int, default=None,
+                    help="state slabs (default: 2*slots + 1)")
+    ap.add_argument("--prefill-chunk", type=int, default=128,
+                    help="longest full-sequence prefill; longer prompts "
+                         "stream their tail through the decode batch")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "priority", "deadline"])
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed workload: short and long prompts")
     args = ap.parse_args(argv)
 
     import jax
@@ -29,8 +55,11 @@ def main(argv=None):
     from repro.configs import get_config, get_smoke_config
     from repro.core.state_update import StateQuantConfig
     from repro.models import model as M
-    from repro.serving.engine import EngineConfig, Request, ServingEngine
+    from repro.serving.engine import (EngineConfig, PagedEngineConfig,
+                                      PagedServingEngine, Request,
+                                      ServingEngine)
     from repro.serving.sampler import SamplingConfig
+    from repro.serving.scheduler import SchedulerConfig
 
     cfg = (get_smoke_config(args.arch) if args.smoke_size
            else get_config(args.arch))
@@ -48,21 +77,56 @@ def main(argv=None):
         params = restored["params"]
         print(f"loaded checkpoint step {step}")
 
-    eng = ServingEngine(params, cfg, EngineConfig(
-        slots=args.slots, cache_capacity=args.cache_capacity,
-        sampling=SamplingConfig(temperature=args.temperature, top_k=40)))
-    rng = np.random.default_rng(0)
+    sampling = SamplingConfig(temperature=args.temperature,
+                              top_k=40 if args.temperature > 0 else 0,
+                              top_p=args.top_p)
+    if args.paged:
+        eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+            max_decode_batch=args.slots, n_pages=args.pages,
+            n_slabs=args.slabs or 2 * args.slots + 1,
+            prefill_chunk=args.prefill_chunk, sampling=sampling,
+            scheduler=SchedulerConfig(policy=args.policy), seed=args.seed))
+    else:
+        eng = ServingEngine(params, cfg, EngineConfig(
+            slots=args.slots, cache_capacity=args.cache_capacity,
+            sampling=sampling))
+
+    rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
+        if args.mixed:
+            # alternate short prompts with multi-page long ones
+            n = 8 + i % 24 if i % 3 else 130 + 16 * (i % 4)
+        else:
+            n = 8 + i % 24
         eng.submit(Request(
             rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, 8 + i % 24).astype(np.int32),
-            max_new_tokens=args.max_new))
+            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+            max_new_tokens=args.max_new,
+            priority=i % 3 if args.policy == "priority" else 0,
+            deadline=(time.time() + 1 + i % 5
+                      if args.policy == "deadline" else None)))
     t0 = time.perf_counter()
     done = eng.run()
     stats = eng.stats()
+    pool = "paged" if args.paged else "slots"
     print(f"{len(done)} requests, {stats['tokens']} tokens, "
           f"{stats['tokens_per_s']:.1f} tok/s "
-          f"(wall {time.perf_counter()-t0:.1f}s, state={args.state_format})")
+          f"(wall {time.perf_counter()-t0:.1f}s, state={args.state_format}, "
+          f"pool={pool})")
+    for k in ("mean_ttft_s", "p50_ttft_s", "p99_ttft_s",
+              "p50_tok_latency_s", "p99_tok_latency_s"):
+        if k in stats:
+            print(f"  {k}={stats[k]*1e3:.1f}ms", end="")
+    print()
+    if args.paged:
+        print(f"  occupancy={stats['occupancy']:.2f} "
+              f"fragmentation={stats['fragmentation']:.2f} "
+              f"preemptions={int(stats['preemptions'])}")
+        rep = eng.bank_report()
+        print(f"  pimsim page-map: step={rep['t_real_s']*1e6:.2f}us "
+              f"ideal={rep['t_ideal_s']*1e6:.2f}us "
+              f"conflict_factor={rep['conflict_factor']:.2f} "
+              f"bank_imbalance={rep['imbalance']:.2f}")
     return 0
 
 

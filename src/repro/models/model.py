@@ -402,12 +402,21 @@ def init_decode_caches(cfg: ModelConfig, B: int, cache_capacity: int) -> Any:
     return stacked
 
 
+def abstract_decode_caches(cfg: ModelConfig, B: int, cache_capacity: int) -> Any:
+    """Shape/dtype skeleton of :func:`init_decode_caches` without allocating.
+
+    The paged memory pool (``serving/memory``) probes this at several (B, T)
+    points to locate every leaf's batch and time axis exactly.
+    """
+    return jax.eval_shape(lambda: init_decode_caches(cfg, B, cache_capacity))
+
+
 def set_cache_lengths(caches: Any, lengths: jnp.ndarray) -> Any:
     """Overwrite every KVCache.lengths leaf (e.g. decode over a warm cache)."""
     def fix(c):
         if isinstance(c, AC.KVCache):
             return AC.KVCache(c.k, c.v, jnp.broadcast_to(lengths, c.lengths.shape),
-                              c.fmt, c.v_width)
+                              c.fmt, c.v_width, c.time_axis)
         return c
     return jax.tree.map(fix, caches,
                         is_leaf=lambda x: isinstance(x, AC.KVCache))

@@ -1,24 +1,28 @@
-"""Batched serving engine: the Pimba system loop (paper Fig. 7).
+"""Batched serving engines: the Pimba system loop (paper Fig. 7).
 
-Continuous batching over a fixed pool of decode slots:
-  * prefill runs full-sequence ("GPU phase": compute-intensive chunked form)
-    and writes the resulting quantized state / KV cache into a free slot;
-  * every decode step advances ALL active slots through the fused quantized
-    state-update / attention path (the "PIM phase") in one jitted call;
-  * finished sequences free their slot, the scheduler admits the next
-    request (FCFS), and tokens stream back per request.
+Two engines share the request/stats machinery:
 
-The cache pool is preallocated (slots x capacity) in MX8 -- the 8-bit state
-is what makes slot memory ~2x smaller than the fp16 baseline (paper Fig. 1a,
-15b).  Slot writes go through ``insert_cache_entry`` which overwrites one
-batch row of every cache leaf.
+``ServingEngine`` -- the original fixed-slot pool: continuous batching over
+``slots x cache_capacity`` preallocated caches.  One long request dictates
+everyone's memory footprint and admission is FCFS.
+
+``PagedServingEngine`` -- the paged pool (``serving/memory``): state/KV
+memory is block/page granular with a block table per request, so short and
+long prompts coexist in the same byte budget, admission follows a
+priority/deadline scheduler (``serving/scheduler``), prefill is chunked
+(the tail of a long prompt streams through the shared decode step instead
+of blocking the batch), and the pool preempts by page eviction -- victim
+pages spill to host bit-exactly and resume re-pins them.
+
+The cache pool is MX8 by default -- the 8-bit state is what makes slot
+memory ~2x smaller than the fp16 baseline (paper Fig. 1a, 15b).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +33,7 @@ from repro.core import formats as F
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.sampler import SamplingConfig, sample
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -37,11 +42,14 @@ class Request:
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    priority: int = 0                  # lower = more urgent (paged engine)
+    deadline: Optional[float] = None   # absolute time (paged engine, EDF)
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    truncated: bool = False            # ran out of pool pages mid-generation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +57,27 @@ class EngineConfig:
     slots: int = 4                    # decode batch size
     cache_capacity: int = 256         # max context per slot (tile-aligned)
     sampling: SamplingConfig = SamplingConfig()
+
+
+def _percentile_stats(done: List[Request],
+                      step_times: List[float]) -> Dict[str, float]:
+    """TTFT and per-token latency percentiles shared by both engines."""
+    out: Dict[str, float] = {}
+    ttfts = [r.t_first - r.t_submit for r in done if r.t_first > 0]
+    if ttfts:
+        out["p50_ttft_s"] = float(np.percentile(ttfts, 50))
+        out["p99_ttft_s"] = float(np.percentile(ttfts, 99))
+        out["mean_ttft_s"] = float(np.mean(ttfts))
+    if step_times:
+        out["p50_step_s"] = float(np.percentile(step_times, 50))
+        out["p99_step_s"] = float(np.percentile(step_times, 99))
+    per_tok = [(r.t_done - r.t_first) / max(len(r.output) - 1, 1)
+               for r in done if r.t_done > 0 and r.t_first > 0
+               and len(r.output) > 1]
+    if per_tok:
+        out["p50_tok_latency_s"] = float(np.percentile(per_tok, 50))
+        out["p99_tok_latency_s"] = float(np.percentile(per_tok, 99))
+    return out
 
 
 def _row_insert(pool_leaf, row_leaf, slot):
@@ -84,6 +113,7 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.step_count = 0
+        self.step_times: List[float] = []
         self._key = jax.random.PRNGKey(0)
 
         self._decode = jax.jit(partial(M.decode_step, cfg=cfg,
@@ -112,10 +142,10 @@ class ServingEngine:
             return {"tokens": 0}
         t0 = min(r.t_submit for r in self.done)
         t1 = max(r.t_done for r in self.done)
-        return {"tokens": toks, "wall_s": t1 - t0,
-                "tokens_per_s": toks / max(t1 - t0, 1e-9),
-                "mean_ttft_s": float(np.mean(
-                    [r.t_first - r.t_submit for r in self.done]))}
+        out = {"tokens": toks, "wall_s": t1 - t0,
+               "tokens_per_s": toks / max(t1 - t0, 1e-9)}
+        out.update(_percentile_stats(self.done, self.step_times))
+        return out
 
     # ------------- internals -------------
 
@@ -130,8 +160,8 @@ class ServingEngine:
         S = prompt.shape[1]
         batch = {"tokens": prompt, "targets": prompt}
         logits, row_caches = self._prefill(self.params, batch=batch)
-        # re-capacity the row cache to the pool capacity
-        row_caches = _recapacity(row_caches, self.ecfg.cache_capacity)
+        # re-capacity the row cache to the pool capacity (explicit time axis)
+        row_caches = AC.recapacity(row_caches, self.ecfg.cache_capacity)
         # NB: zip leaves rather than tree.map -- QuantizedTensor aux data
         # embeds its logical shape, which differs between the B=1 prefill
         # row and the B=slots pool (the structures are otherwise parallel)
@@ -141,9 +171,15 @@ class ServingEngine:
         self.caches = jax.tree_util.tree_unflatten(
             pool_def, [_row_insert(p, r, slot)
                        for p, r in zip(pool_leaves, row_leaves)])
-        tok = int(jnp.argmax(logits[0]))
+        self._key, sub = jax.random.split(self._key)
+        tok = int(sample(logits, self.ecfg.sampling, sub)[0])
         req.t_first = time.perf_counter()
         req.output.append(tok)
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if len(req.output) >= req.max_new_tokens or hit_eos:
+            req.t_done = time.perf_counter()
+            self.done.append(req)
+            return                      # never occupies a decode slot
         self.cur_tokens = self.cur_tokens.at[slot].set(tok)
         self.lengths = self.lengths.at[slot].set(S)
         self.active[slot] = True
@@ -153,6 +189,7 @@ class ServingEngine:
 
     def _decode_step(self):
         self.step_count += 1
+        t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, tokens=self.cur_tokens, caches=self.caches,
             lengths=self.lengths, seed=jnp.int32(self.step_count))
@@ -161,55 +198,19 @@ class ServingEngine:
         self.lengths = self.lengths + jnp.asarray(self.active, jnp.int32)
         self.cur_tokens = toks
         toks_np = np.asarray(toks)
+        # one host sync for the whole step, not one per slot
+        lengths_np = np.asarray(self.lengths)
+        self.step_times.append(time.perf_counter() - t0)
         for slot in np.flatnonzero(self.active):
             req = self.slot_req[slot]
             req.output.append(int(toks_np[slot]))
             hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
-            full = int(self.lengths[slot]) + 1 >= self.ecfg.cache_capacity
+            full = int(lengths_np[slot]) + 1 >= self.ecfg.cache_capacity
             if len(req.output) >= req.max_new_tokens or hit_eos or full:
                 req.t_done = time.perf_counter()
                 self.done.append(req)
                 self.slot_req[slot] = None
                 self.active[slot] = False
-
-
-def _recapacity(caches, capacity: int):
-    """Pad/trim every KV-cache time axis to the pool capacity."""
-    def fix(c):
-        if not isinstance(c, AC.KVCache):
-            return c
-        def pad_t(leaf):
-            # time axis is axis 1 of (B, T, ...) or axis 2 when group-stacked
-            ax = 1 if leaf.ndim < 4 or leaf.shape[1] % 128 == 0 else 2
-            # locate the tile-aligned time axis (first dim divisible by 128
-            # after batch); robust for both stacked and unstacked leaves
-            for a in range(1, leaf.ndim - 1):
-                if leaf.shape[a] % 128 == 0 and leaf.shape[a] >= 128:
-                    ax = a
-                    break
-            T = leaf.shape[ax]
-            if T == capacity:
-                return leaf
-            if T > capacity:
-                idx = [slice(None)] * leaf.ndim
-                idx[ax] = slice(0, capacity)
-                return leaf[tuple(idx)]
-            pad = [(0, 0)] * leaf.ndim
-            pad[ax] = (0, capacity - T)
-            return jnp.pad(leaf, pad)
-        if isinstance(c.k, F.QuantizedTensor):
-            def fix_qt(qt):
-                payload = {f: pad_t(v) for f, v in qt.payload.items()}
-                ref = payload.get("mantissa", payload.get("q", payload.get("x")))
-                return F.QuantizedTensor(qt.fmt, ref.shape, payload)
-            nk = fix_qt(c.k)
-            nv = None if c.v is None else fix_qt(c.v)
-        else:
-            nk = pad_t(c.k)
-            nv = None if c.v is None else pad_t(c.v)
-        return AC.KVCache(nk, nv, c.lengths, c.fmt, c.v_width)
-    return jax.tree.map(fix, caches,
-                        is_leaf=lambda x: isinstance(x, AC.KVCache))
 
 
 def _set_row_lengths(caches, slot: int, length: int):
@@ -220,7 +221,270 @@ def _set_row_lengths(caches, slot: int, length: int):
                 nl = c.lengths.at[:, slot].set(length)
             else:
                 nl = c.lengths.at[slot].set(length)
-            return AC.KVCache(c.k, c.v, nl, c.fmt, c.v_width)
+            return AC.KVCache(c.k, c.v, nl, c.fmt, c.v_width, c.time_axis)
         return c
     return jax.tree.map(fix, caches,
                         is_leaf=lambda x: isinstance(x, AC.KVCache))
+
+
+# ===========================================================================
+# Paged engine
+# ===========================================================================
+
+from repro.serving.memory import (PAGE_TOKENS, PagedStatePool,  # noqa: E402
+                                  SpilledRequest, pages_for)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedEngineConfig:
+    max_decode_batch: int = 4         # rows in the jitted decode step
+    n_pages: Optional[int] = 33       # 128-token pages (incl. 1 scratch)
+    n_slabs: int = 9                  # state slabs (incl. 1 scratch)
+    byte_budget: Optional[int] = None  # alternative to n_pages
+    prefill_chunk: int = 128          # longest full-sequence prefill; the
+                                      # prompt tail streams through decode
+    sampling: SamplingConfig = SamplingConfig()
+    scheduler: SchedulerConfig = SchedulerConfig()
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    length: int                       # cached positions so far
+    pending: List[int]                # prompt tokens not yet consumed
+    cur_token: int                    # next token to feed once prompt is done
+
+
+class PagedServingEngine:
+    """Continuous batching over the paged, bank-aware state/KV pool."""
+
+    def __init__(self, params, cfg: ModelConfig, pcfg: PagedEngineConfig,
+                 mesh_axes=None):
+        assert not cfg.encoder_only
+        self.params = params
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.pool = PagedStatePool(
+            cfg, n_pages=None if pcfg.byte_budget is not None else pcfg.n_pages,
+            n_slabs=pcfg.n_slabs, byte_budget=pcfg.byte_budget,
+            mesh_axes=mesh_axes)
+        self.sched = Scheduler(pcfg.scheduler)
+        self.active: Dict[int, _Active] = {}
+        self.rows: List[Optional[int]] = [None] * pcfg.max_decode_batch
+        self.spilled: Dict[int, Tuple[SpilledRequest, List[int], int]] = {}
+        self.done: List[Request] = []
+        self.step_count = 0
+        self.step_times: List[float] = []
+        self.preemptions = 0
+        self._occ: List[float] = []
+        self._frag: List[float] = []
+        self.last_traffic: Optional[np.ndarray] = None
+        self._key = jax.random.PRNGKey(pcfg.seed)
+        self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
+                                        mesh_axes=mesh_axes))
+        max_chunk_pages = pages_for(pcfg.prefill_chunk)
+        assert max_chunk_pages <= self.pool.usable_pages, \
+            "prefill_chunk does not fit the page pool"
+
+    # ------------- public API -------------
+
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.sched.push(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.sched or self.active) and self.step_count < max_steps:
+            admitted = self._admit()
+            if self.active:
+                self._ensure_headroom()
+            if self.active:
+                self._step()
+            elif not admitted:
+                # queue non-empty but nothing fits and nothing runs:
+                # fail the head loudly rather than spinning
+                req = self.sched.pop()
+                req.truncated = True
+                req.t_done = time.perf_counter()
+                self.done.append(req)
+                self.spilled.pop(req.rid, None)
+        return self.done
+
+    def stats(self) -> Dict[str, float]:
+        toks = sum(len(r.output) for r in self.done)
+        if not self.done:
+            return {"tokens": 0}
+        t0 = min(r.t_submit for r in self.done)
+        t1 = max(r.t_done for r in self.done)
+        out = {"tokens": toks, "wall_s": t1 - t0,
+               "tokens_per_s": toks / max(t1 - t0, 1e-9),
+               "preemptions": float(self.preemptions),
+               "occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
+               "fragmentation": (float(np.mean(self._frag))
+                                 if self._frag else 0.0)}
+        out.update(_percentile_stats(self.done, self.step_times))
+        return out
+
+    def bank_report(self) -> Dict[str, float]:
+        """Score the pool's *actual* page map with the PIM timing model."""
+        from repro.core import pimsim
+        m = self.last_traffic
+        if m is None:
+            m = self.pool.bank_traffic(list(self.active))
+        rep = pimsim.placement_step_latency(m, pimsim.SystemConfig())
+        rep["imbalance"] = self.pool.placement.imbalance()
+        return rep
+
+    # ------------- admission / preemption -------------
+
+    def _admit(self) -> bool:
+        admitted = False
+        while len(self.active) < self.pcfg.max_decode_batch and self.sched:
+            head = self.sched.peek()
+            if head.rid in self.spilled:
+                need = self.spilled[head.rid][0].n_pages
+            else:
+                s0 = min(len(head.prompt), self.pcfg.prefill_chunk)
+                need = pages_for(s0)
+            if not self.pool.can_admit(need):
+                victim = self.sched.choose_victim(
+                    [a.req for a in self.active.values()])
+                if victim is not None and self.sched.should_preempt(head,
+                                                                    victim):
+                    self._preempt(victim.rid)
+                    continue
+                break
+            req = self.sched.pop()
+            if req.rid in self.spilled:
+                self._resume(req)
+            else:
+                self._prefill_into(req)
+            admitted = True
+        return admitted
+
+    def _assign_row(self, rid: int):
+        row = self.rows.index(None)
+        self.rows[row] = rid
+
+    def _free_row(self, rid: int):
+        self.rows[self.rows.index(rid)] = None
+
+    def _prefill_into(self, req: Request):
+        s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
+        ok = self.pool.register(req.rid, pages_for(s0))
+        assert ok, "admission checked capacity"
+        prompt = jnp.asarray(req.prompt[:s0], jnp.int32)[None]
+        logits, row_caches = self._prefill(
+            self.params, batch={"tokens": prompt, "targets": prompt})
+        self.pool.insert_prefill(req.rid, row_caches)
+        a = _Active(req, length=s0, pending=list(map(int, req.prompt[s0:])),
+                    cur_token=-1)
+        if not a.pending:
+            tok = self._sample_one(logits)
+            req.t_first = time.perf_counter()
+            req.output.append(tok)
+            a.cur_token = tok
+        self.active[req.rid] = a
+        self._assign_row(req.rid)
+        if req.output and (len(req.output) >= req.max_new_tokens
+                           or (req.eos_id is not None
+                               and req.output[-1] == req.eos_id)):
+            self._finish(req.rid)       # prefill already produced the end
+
+    def _resume(self, req: Request):
+        sp, pending, cur = self.spilled.pop(req.rid)
+        ok = self.pool.resume(req.rid, sp)
+        assert ok, "admission checked capacity"
+        self.active[req.rid] = _Active(req, sp.length, pending, cur)
+        self._assign_row(req.rid)
+
+    def _preempt(self, rid: int):
+        """Evict by page spill: state leaves the device bit-exactly and the
+        request goes back to the scheduler queue."""
+        a = self.active.pop(rid)
+        self._free_row(rid)
+        sp = self.pool.spill(rid, a.length)
+        self.spilled[rid] = (sp, a.pending, a.cur_token)
+        self.sched.push(a.req, resumed=True)
+        self.preemptions += 1
+
+    def _finish(self, rid: int, truncated: bool = False):
+        a = self.active.pop(rid)
+        self._free_row(rid)
+        self.pool.release(rid)
+        a.req.truncated = truncated
+        a.req.t_done = time.perf_counter()
+        self.done.append(a.req)
+
+    def _ensure_headroom(self):
+        """Every active request must own the page its next token writes."""
+        for rid in list(self.active):
+            a = self.active.get(rid)
+            if a is None:
+                continue
+            needed = a.length // PAGE_TOKENS + 1
+            while needed > len(self.pool.page_table[rid]):
+                if self.pool.grow(rid, needed - len(self.pool.page_table[rid])):
+                    break
+                victim = self.sched.choose_victim(
+                    [b.req for b in self.active.values()], exclude=a.req)
+                if victim is None:
+                    self._finish(rid, truncated=True)
+                    break
+                self._preempt(victim.rid)
+
+    # ------------- the decode step -------------
+
+    def _sample_one(self, logits) -> int:
+        self._key, sub = jax.random.split(self._key)
+        return int(sample(logits, self.pcfg.sampling, sub)[0])
+
+    def _step(self):
+        self.step_count += 1
+        B = self.pcfg.max_decode_batch
+        tokens = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for row, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            a = self.active[rid]
+            tokens[row] = a.pending[0] if a.pending else a.cur_token
+            lengths[row] = a.length
+        t0 = time.perf_counter()
+        logits = self.pool.decode(self.params, self.rows, tokens, lengths,
+                                  seed=self.step_count)
+        self._key, sub = jax.random.split(self._key)
+        toks_np = np.asarray(sample(logits, self.pcfg.sampling, sub))
+        self.step_times.append(time.perf_counter() - t0)
+
+        rids = [r for r in self.rows if r is not None]
+        self.last_traffic = self.pool.bank_traffic(rids)
+        self._occ.append(self.pool.occupancy())
+        self._frag.append(self.pool.fragmentation(
+            {r: self.active[r].length for r in rids}))
+
+        for row, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            a = self.active[rid]
+            a.length += 1
+            if a.pending:
+                fed = a.pending.pop(0)
+                a.cur_token = fed
+                if a.pending:
+                    continue            # still consuming the prompt
+                # that was the last prompt token: this step's logits are
+                # the first-generation distribution
+                tok = int(toks_np[row])
+                a.req.t_first = time.perf_counter()
+                a.req.output.append(tok)
+                a.cur_token = tok
+            else:
+                tok = int(toks_np[row])
+                a.req.output.append(tok)
+                a.cur_token = tok
+            req = a.req
+            hit_eos = (req.eos_id is not None and req.output
+                       and req.output[-1] == req.eos_id)
+            if len(req.output) >= req.max_new_tokens or hit_eos:
+                self._finish(rid)

@@ -1,0 +1,11 @@
+"""Paged, bank-aware state/KV memory pool for the serving engine."""
+from repro.serving.memory.layout import PAGE_TOKENS, CachePaging, LeafSpec
+from repro.serving.memory.placement import BankAwarePlacement, BankTopology
+from repro.serving.memory.pool import (PagedStatePool, SpilledRequest,
+                                       bucket_pages, pages_for)
+
+__all__ = [
+    "PAGE_TOKENS", "CachePaging", "LeafSpec",
+    "BankAwarePlacement", "BankTopology",
+    "PagedStatePool", "SpilledRequest", "bucket_pages", "pages_for",
+]

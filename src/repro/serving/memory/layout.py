@@ -1,0 +1,355 @@
+"""Cache-tree paging adapter: maps the model's decode-cache pytree onto
+page / slab pools and back.
+
+The decode caches of a model are an arbitrary pytree of
+
+  * ``KVCache`` nodes -- quantized (or plain) K/V streams with a **time
+    axis** that grows with the context.  These are paged: the time axis is
+    cut into 128-token, MX-tile-aligned pages and each page lives at a
+    physical page id shared by every KV leaf (page id ``p`` indexes slice
+    ``[p]`` of every KV pool array).
+  * fixed-size recurrent-state leaves (``QuantizedTensor`` payloads or plain
+    arrays: SSM states, conv tails, sLSTM carries).  These are slab
+    allocated: one slab id per request indexes one row of every slab pool.
+
+Axes are discovered **exactly**, not guessed: the layout is probed by
+building abstract cache skeletons at (B=1,T=128), (B=2,T=128) and
+(B=1,T=256) and diffing shapes -- the axis that moves with B is the batch
+axis, the one that moves with T is the time axis.  Group-stacked leaves
+((G, B, T, ...) from scan-over-layers) fall out of the same probe.
+
+All gather/scatter functions are pure jnp and run inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention_cache as AC
+from repro.core import formats as F
+
+PAGE_TOKENS = 128     # tokens per page == the MX tile / kernel alignment unit
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """One pooled array leaf of the cache tree."""
+    kind: str              # "page" | "slab"
+    batch_axis: int        # in leaf coordinates (stacked layout)
+    time_axis: int         # leaf coordinates; -1 for slabs
+    shape: Tuple[int, ...]  # template leaf shape at B=1, T=PAGE_TOKENS
+    dtype: Any
+
+    @property
+    def content_shape(self) -> Tuple[int, ...]:
+        """Leaf shape with the batch axis removed (one page / one slab)."""
+        s = list(self.shape)
+        s.pop(self.batch_axis)
+        return tuple(s)
+
+    @property
+    def content_time_axis(self) -> int:
+        """Time axis position inside ``content_shape`` (pages only)."""
+        assert self.kind == "page"
+        return self.time_axis - (1 if self.batch_axis < self.time_axis else 0)
+
+    @property
+    def content_nbytes(self) -> int:
+        return int(np.prod(self.content_shape)) * jnp.dtype(self.dtype).itemsize
+
+
+def _is_array(x) -> bool:
+    return isinstance(x, (jnp.ndarray, np.ndarray, jax.ShapeDtypeStruct))
+
+
+def _diff_axis(a, b) -> int:
+    """The single axis where shapes differ, or -1 if identical."""
+    assert len(a.shape) == len(b.shape), (a.shape, b.shape)
+    axes = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+    assert len(axes) <= 1, (a.shape, b.shape)
+    return axes[0] if axes else -1
+
+
+class CachePaging:
+    """Flattens a model's cache tree into LeafSpecs and moves data between
+    pooled storage and dense per-step cache pytrees."""
+
+    def __init__(self, template, t_b2, t_t2):
+        """``template`` is a *real* cache tree at (B=1, T=PAGE_TOKENS);
+        ``t_b2``/``t_t2`` are abstract skeletons at (B=2, T) and (B, 2T)."""
+        self.template = template
+        self.specs: List[LeafSpec] = []
+        self._build_specs(template, t_b2, t_t2, in_kv=False)
+
+    # ------------------------------------------------------------------
+    # traversal -- the one canonical order every operation below follows
+    # ------------------------------------------------------------------
+
+    def _build_specs(self, t, b2, t2, in_kv: bool):
+        if t is None:
+            return
+        if isinstance(t, AC.KVCache):
+            self._build_specs(t.k, b2.k, t2.k, in_kv=True)
+            self._build_specs(t.v, b2.v, t2.v, in_kv=True)
+            # lengths is reconstructed from the request lengths vector,
+            # not pooled -- no spec.
+            return
+        if isinstance(t, F.QuantizedTensor):
+            for f in sorted(t.payload):
+                self._build_specs(t.payload[f], b2.payload[f], t2.payload[f],
+                                  in_kv=in_kv)
+            return
+        if isinstance(t, dict):
+            for k in sorted(t):
+                self._build_specs(t[k], b2[k], t2[k], in_kv=in_kv)
+            return
+        if isinstance(t, (tuple, list)):
+            for a, b, c in zip(t, b2, t2):
+                self._build_specs(a, b, c, in_kv=in_kv)
+            return
+        assert _is_array(t), type(t)
+        b_ax = _diff_axis(t, b2)
+        t_ax = _diff_axis(t, t2)
+        assert b_ax >= 0, f"cache leaf {t.shape} does not scale with batch"
+        if in_kv:
+            assert t_ax >= 0 and t_ax != b_ax, \
+                f"KV leaf {t.shape} has no time axis"
+            self.specs.append(LeafSpec("page", b_ax, t_ax,
+                                       tuple(t.shape), t.dtype))
+        else:
+            assert t_ax == -1, f"state leaf {t.shape} scales with T"
+            self.specs.append(LeafSpec("slab", b_ax, -1,
+                                       tuple(t.shape), t.dtype))
+
+    # ------------------------------------------------------------------
+    # pools
+    # ------------------------------------------------------------------
+
+    def make_pools(self, n_pages: int, n_slabs: int) -> List[jnp.ndarray]:
+        """One pool array per spec: (n_pages, *content) / (n_slabs, *content).
+
+        Slab pools replicate the template's *initial* state content (e.g.
+        sLSTM's ``m = -1e30`` carry), so a freshly pinned slab is a valid
+        zero-context state even before prefill overwrites it.
+        """
+        pools = []
+        it = iter(self._iter_template_leaves(self.template))
+        for spec in self.specs:
+            leaf = next(it)
+            if spec.kind == "page":
+                pools.append(jnp.zeros((n_pages,) + spec.content_shape,
+                                       spec.dtype))
+            else:
+                content = jnp.squeeze(jnp.asarray(leaf), axis=spec.batch_axis)
+                pools.append(jnp.broadcast_to(
+                    content[None], (n_slabs,) + spec.content_shape
+                ).astype(spec.dtype))
+        return pools
+
+    def _iter_template_leaves(self, t):
+        """Array leaves in spec order (KVCache lengths skipped)."""
+        if t is None:
+            return
+        if isinstance(t, AC.KVCache):
+            yield from self._iter_template_leaves(t.k)
+            yield from self._iter_template_leaves(t.v)
+            return
+        if isinstance(t, F.QuantizedTensor):
+            for f in sorted(t.payload):
+                yield from self._iter_template_leaves(t.payload[f])
+            return
+        if isinstance(t, dict):
+            for k in sorted(t):
+                yield from self._iter_template_leaves(t[k])
+            return
+        if isinstance(t, (tuple, list)):
+            for a in t:
+                yield from self._iter_template_leaves(a)
+            return
+        yield t
+
+    @property
+    def page_nbytes(self) -> int:
+        """Device bytes one page occupies across every KV pool."""
+        return sum(s.content_nbytes for s in self.specs if s.kind == "page")
+
+    @property
+    def slab_nbytes(self) -> int:
+        return sum(s.content_nbytes for s in self.specs if s.kind == "slab")
+
+    # ------------------------------------------------------------------
+    # per-leaf moves (all jnp, jit-safe)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _gather_page_leaf(pool, bt, spec: LeafSpec):
+        """pool (P, *content), bt (B, npg) -> dense leaf (.., B, T, ..)."""
+        ct = spec.content_time_axis
+        g = pool[bt]                                   # (B, npg, *content)
+        g = jnp.moveaxis(g, 1, 1 + ct)                 # (B, c.., npg, 128, ..)
+        shape = (g.shape[:1 + ct]
+                 + (g.shape[1 + ct] * g.shape[2 + ct],)
+                 + g.shape[3 + ct:])
+        g = g.reshape(shape)
+        return jnp.moveaxis(g, 0, spec.batch_axis)
+
+    @staticmethod
+    def _gather_slab_leaf(pool, slabs, spec: LeafSpec):
+        return jnp.moveaxis(pool[slabs], 0, spec.batch_axis)
+
+    @staticmethod
+    def _scatter_token_leaf(pool, dense, bt, pos, spec: LeafSpec):
+        """Write back the single token row each request appended at ``pos``."""
+        ct = spec.content_time_axis
+        B = pos.shape[0]
+        phys = bt[jnp.arange(B), pos // PAGE_TOKENS]
+        off = pos % PAGE_TOKENS
+        d = jnp.moveaxis(dense, (spec.batch_axis, spec.time_axis), (0, 1))
+        vals = d[jnp.arange(B), pos]                   # (B, *rest)
+        pm = jnp.moveaxis(pool, 1 + ct, 1)             # (P, 128, *rest)
+        pm = pm.at[phys, off].set(vals)
+        return jnp.moveaxis(pm, 1, 1 + ct)
+
+    @staticmethod
+    def _scatter_slab_leaf(pool, dense, slabs, spec: LeafSpec):
+        vals = jnp.moveaxis(dense, spec.batch_axis, 0)
+        return pool.at[slabs].set(vals)
+
+    @staticmethod
+    def _row_to_pages(row, spec: LeafSpec):
+        """Row leaf (B=1 dense, T=npg*128) -> page stack (npg, 128, *rest)."""
+        d = jnp.moveaxis(row, (spec.batch_axis, spec.time_axis), (0, 1))[0]
+        npg = d.shape[0] // PAGE_TOKENS
+        return d.reshape((npg, PAGE_TOKENS) + d.shape[1:])
+
+    @staticmethod
+    def _insert_pages_leaf(pool, pages_vals, page_ids, spec: LeafSpec):
+        ct = spec.content_time_axis
+        pm = jnp.moveaxis(pool, 1 + ct, 1)             # (P, 128, *rest)
+        pm = pm.at[page_ids].set(pages_vals)
+        return jnp.moveaxis(pm, 1, 1 + ct)
+
+    @staticmethod
+    def _extract_pages_leaf(pool, page_ids, spec: LeafSpec):
+        ct = spec.content_time_axis
+        pm = jnp.moveaxis(pool, 1 + ct, 1)
+        return pm[page_ids]                            # (npg, 128, *rest)
+
+    # ------------------------------------------------------------------
+    # tree-level operations
+    # ------------------------------------------------------------------
+
+    def gather(self, pools: Sequence[jnp.ndarray], bt: jnp.ndarray,
+               slabs: jnp.ndarray, lengths: jnp.ndarray):
+        """Materialize the dense cache pytree for one decode step.
+
+        bt (B, npg) physical page ids; slabs (B,); lengths (B,).
+        Returns a cache tree structurally identical to the model's, with
+        QuantizedTensor aux shapes patched to the gathered (B, T) so the
+        MX kernels see the right logical geometry.
+        """
+        B = int(bt.shape[0])
+        T = int(bt.shape[1]) * PAGE_TOKENS
+        dense = []
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "page":
+                dense.append(self._gather_page_leaf(pool, bt, spec))
+            else:
+                dense.append(self._gather_slab_leaf(pool, slabs, spec))
+        it = iter(dense)
+        return self._rebuild(self.template, it, B, T, lengths)
+
+    def _rebuild(self, t, it, B, T, lengths, in_kv=False, kv_time_axis=1):
+        if t is None:
+            return None
+        if isinstance(t, AC.KVCache):
+            k = self._rebuild(t.k, it, B, T, lengths, True, t.time_axis)
+            v = self._rebuild(t.v, it, B, T, lengths, True, t.time_axis)
+            ln = jnp.broadcast_to(
+                lengths.astype(t.lengths.dtype),
+                t.lengths.shape[:-1] + (B,))
+            return AC.KVCache(k, v, ln, t.fmt, t.v_width, t.time_axis)
+        if isinstance(t, F.QuantizedTensor):
+            payload = {f: next(it) for f in sorted(t.payload)}
+            shape = list(t.shape)
+            shape[0] = B
+            if in_kv:
+                shape[kv_time_axis] = T
+            return F.QuantizedTensor(t.fmt, tuple(shape), payload)
+        if isinstance(t, dict):
+            return {k: self._rebuild(t[k], it, B, T, lengths, in_kv,
+                                     kv_time_axis)
+                    for k in sorted(t)}
+        if isinstance(t, tuple):
+            return tuple(self._rebuild(a, it, B, T, lengths, in_kv,
+                                       kv_time_axis) for a in t)
+        if isinstance(t, list):
+            return [self._rebuild(a, it, B, T, lengths, in_kv, kv_time_axis)
+                    for a in t]
+        return next(it)
+
+    def _iter_cache_leaves(self, t):
+        """Array leaves of a *dense cache tree* in spec order."""
+        yield from self._iter_template_leaves(t)
+
+    def scatter_step(self, pools: Sequence[jnp.ndarray], new_caches,
+                     bt: jnp.ndarray, slabs: jnp.ndarray,
+                     lengths: jnp.ndarray) -> List[jnp.ndarray]:
+        """Commit one decode step: the appended KV token row goes to its
+        page, recurrent slabs are rewritten in place."""
+        out = []
+        it = self._iter_cache_leaves(new_caches)
+        for pool, spec in zip(pools, self.specs):
+            dense = next(it)
+            if spec.kind == "page":
+                out.append(self._scatter_token_leaf(pool, dense, bt,
+                                                    lengths, spec))
+            else:
+                out.append(self._scatter_slab_leaf(pool, dense, slabs, spec))
+        return out
+
+    def insert_request(self, pools: Sequence[jnp.ndarray], row_caches,
+                       page_ids: jnp.ndarray, slab: jnp.ndarray
+                       ) -> List[jnp.ndarray]:
+        """Pin a prefilled B=1 cache row into freshly allocated pages+slab."""
+        out = []
+        it = self._iter_cache_leaves(row_caches)
+        for pool, spec in zip(pools, self.specs):
+            row = next(it)
+            if spec.kind == "page":
+                vals = self._row_to_pages(row, spec)
+                out.append(self._insert_pages_leaf(pool, vals, page_ids, spec))
+            else:
+                vals = jnp.moveaxis(row, spec.batch_axis, 0)[0]
+                out.append(pool.at[slab].set(vals))
+        return out
+
+    def extract_request(self, pools: Sequence[jnp.ndarray],
+                        page_ids: jnp.ndarray, slab: jnp.ndarray
+                        ) -> List[jnp.ndarray]:
+        """Pull one request's pages+slab out of the pools (for host spill)."""
+        out = []
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "page":
+                out.append(self._extract_pages_leaf(pool, page_ids, spec))
+            else:
+                out.append(pool[slab])
+        return out
+
+    def insert_blob(self, pools: Sequence[jnp.ndarray], blob,
+                    page_ids: jnp.ndarray, slab: jnp.ndarray
+                    ) -> List[jnp.ndarray]:
+        """Re-pin a spilled request (inverse of extract_request); the new
+        physical page ids may differ from the ones it was evicted from."""
+        out = []
+        for pool, spec, vals in zip(pools, self.specs, blob):
+            if spec.kind == "page":
+                out.append(self._insert_pages_leaf(pool, jnp.asarray(vals),
+                                                   page_ids, spec))
+            else:
+                out.append(pool.at[slab].set(jnp.asarray(vals)))
+        return out

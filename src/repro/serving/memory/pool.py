@@ -1,0 +1,262 @@
+"""Paged, bank-aware state/KV memory pool.
+
+One ``PagedStatePool`` owns the physical decode-cache storage of a serving
+engine:
+
+  * **KV pages** -- every attention/MLA cache leaf is stored as
+    ``(n_pages, ..., 128, ...)`` arrays; a physical page id addresses one
+    128-token, MX-tile-aligned chunk across *all* KV leaves at once.
+  * **state slabs** -- every fixed-size recurrent leaf (SSM state, conv
+    tails, sLSTM carries) is ``(n_slabs, ...)``; one slab id per request.
+
+A request owns a block table (list of page ids) plus one slab id.  Slot
+reuse is copy-free: finishing or growing a request only moves integer ids
+between free lists -- no cache-tree rewrite, which is what retires the old
+``_recapacity`` per-prefill tree surgery from the serving hot path.
+
+Placement is bank-aware (see :mod:`.placement`): page ids map to
+(pseudo-channel, bank-pair) coordinates and allocation balances live load
+across bank pairs, producing a real page map that
+:func:`repro.core.pimsim.placement_step_latency` can score.
+
+Preemption spills a victim's pages+slab to host memory bit-exactly; resume
+re-pins them to fresh physical ids (identical logits, different placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.memory.layout import PAGE_TOKENS, CachePaging
+from repro.serving.memory.placement import BankAwarePlacement, BankTopology
+
+
+def pages_for(n_tokens: int) -> int:
+    """Pages needed to hold ``n_tokens`` cached positions."""
+    return max(1, math.ceil(n_tokens / PAGE_TOKENS))
+
+
+def bucket_pages(npg: int) -> int:
+    """Round a page count up to a power of two to bound jit retraces."""
+    return 1 << max(0, (npg - 1).bit_length())
+
+
+@dataclasses.dataclass
+class SpilledRequest:
+    """Host-side copy of an evicted request's state (bit-exact)."""
+    blob: List[np.ndarray]
+    n_pages: int
+    length: int
+
+
+class PagedStatePool:
+    """Block/page-granular pool backing both KV caches and SSM states.
+
+    Page id 0 and slab id 0 are reserved scratch targets for inactive decode
+    rows; usable capacity is ``n_pages - 1`` pages / ``n_slabs - 1`` slabs.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_pages: Optional[int] = None,
+                 n_slabs: int = 9, byte_budget: Optional[int] = None,
+                 topology: Optional[BankTopology] = None, mesh_axes=None):
+        self.cfg = cfg
+        self.mesh_axes = mesh_axes
+        template = M.init_decode_caches(cfg, 1, PAGE_TOKENS)
+        t_b2 = M.abstract_decode_caches(cfg, 2, PAGE_TOKENS)
+        t_t2 = M.abstract_decode_caches(cfg, 1, 2 * PAGE_TOKENS)
+        self.paging = CachePaging(template, t_b2, t_t2)
+
+        if byte_budget is not None:
+            assert n_pages is None, "give n_pages or byte_budget, not both"
+            state_bytes = (n_slabs - 1) * self.paging.slab_nbytes
+            per_page = max(self.paging.page_nbytes, 1)
+            n_pages = 1 + max(1, (byte_budget - state_bytes) // per_page)
+        assert n_pages is not None and n_pages >= 2 and n_slabs >= 2
+        self.n_pages = int(n_pages)
+        self.n_slabs = int(n_slabs)
+
+        self.pools = self.paging.make_pools(self.n_pages, self.n_slabs)
+        if topology is None:
+            # size the coordinate space to the pool, so the conflict score
+            # compares against a *reachable* ideal spread
+            pch, pairs = 16, 8
+            while pch * pairs > max(self.n_pages - 1, 1) and pch * pairs > 1:
+                if pairs >= pch:
+                    pairs = max(1, pairs // 2)
+                else:
+                    pch = max(1, pch // 2)
+            topology = BankTopology(pch, pairs)
+        self.placement = BankAwarePlacement(self.n_pages, topology)
+        self._free_slabs: List[int] = list(range(1, self.n_slabs))
+        self.page_table: Dict[int, List[int]] = {}     # rid -> page ids
+        self.slab_of: Dict[int, int] = {}              # rid -> slab id
+
+        self._decode = jax.jit(self._decode_impl)
+        self._insert = jax.jit(self.paging.insert_request)
+        self._extract = jax.jit(self.paging.extract_request)
+        self._insert_blob = jax.jit(self.paging.insert_blob)
+
+    # ------------------------------------------------------------------
+    # allocation
+    # ------------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return self.placement.n_free
+
+    @property
+    def free_slabs(self) -> int:
+        return len(self._free_slabs)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.placement.n_usable
+
+    def can_admit(self, n_pages: int) -> bool:
+        return self.free_pages >= n_pages and self.free_slabs >= 1
+
+    def register(self, rid: int, n_pages: int) -> bool:
+        """Claim a slab + ``n_pages`` pages for a new / resuming request."""
+        assert rid not in self.page_table
+        if not self.can_admit(n_pages):
+            return False
+        pages = self.placement.alloc(n_pages)
+        if pages is None:
+            return False
+        self.page_table[rid] = pages
+        self.slab_of[rid] = self._free_slabs.pop()
+        return True
+
+    def grow(self, rid: int, n_new: int) -> bool:
+        """Extend a request's block table -- copy-free, just new page ids."""
+        pages = self.placement.alloc(n_new)
+        if pages is None:
+            return False
+        self.page_table[rid].extend(pages)
+        return True
+
+    def release(self, rid: int):
+        """Free a request's pages + slab (copy-free: ids return to the free
+        lists; page contents are overwritten on next pin)."""
+        self.placement.free(self.page_table.pop(rid))
+        self._free_slabs.append(self.slab_of.pop(rid))
+
+    # ------------------------------------------------------------------
+    # data movement
+    # ------------------------------------------------------------------
+
+    def insert_prefill(self, rid: int, row_caches):
+        """Pin a prefilled B=1 cache row (T must equal npg*PAGE_TOKENS)."""
+        pages = jnp.asarray(self.page_table[rid], jnp.int32)
+        slab = jnp.int32(self.slab_of[rid])
+        self.pools = self._insert(self.pools, row_caches, pages, slab)
+
+    def spill(self, rid: int, length: int) -> SpilledRequest:
+        """Evict: copy pages+slab to host bit-exactly, free the device ids."""
+        pages = self.page_table[rid]
+        blob = self._extract(self.pools, jnp.asarray(pages, jnp.int32),
+                             jnp.int32(self.slab_of[rid]))
+        host = [np.asarray(x) for x in blob]
+        self.release(rid)
+        return SpilledRequest(host, len(pages), length)
+
+    def resume(self, rid: int, sp: SpilledRequest) -> bool:
+        """Re-pin a spilled request onto fresh pages (same bits, possibly a
+        different bank placement)."""
+        if not self.register(rid, sp.n_pages):
+            return False
+        pages = jnp.asarray(self.page_table[rid], jnp.int32)
+        slab = jnp.int32(self.slab_of[rid])
+        self.pools = self._insert_blob(self.pools, sp.blob, pages, slab)
+        return True
+
+    # ------------------------------------------------------------------
+    # the decode step
+    # ------------------------------------------------------------------
+
+    def _decode_impl(self, params, pools, bt, slabs, lengths, tokens, seed):
+        caches = self.paging.gather(pools, bt, slabs, lengths)
+        logits, new_caches = M.decode_step(
+            params, cfg=self.cfg, tokens=tokens, caches=caches,
+            lengths=lengths, seed=seed, mesh_axes=self.mesh_axes)
+        pools = self.paging.scatter_step(pools, new_caches, bt, slabs, lengths)
+        return logits, pools
+
+    def block_table(self, rids: Sequence[Optional[int]]) -> np.ndarray:
+        """Dense (B, npg_bucket) block table; absent rows use scratch ids."""
+        npg = max([len(self.page_table[r]) for r in rids if r is not None],
+                  default=1)
+        npg = bucket_pages(npg)
+        bt = np.zeros((len(rids), npg), np.int32)
+        for i, r in enumerate(rids):
+            if r is not None:
+                pages = self.page_table[r]
+                bt[i, :len(pages)] = pages
+        return bt
+
+    def decode(self, params, rids: Sequence[Optional[int]],
+               tokens: np.ndarray, lengths: np.ndarray, seed: int):
+        """Run one batched decode step over ``rids`` (None = idle row) and
+        commit the pools.  Returns logits (B, V) on device."""
+        bt = jnp.asarray(self.block_table(rids))
+        slabs = jnp.asarray([self.slab_of.get(r, 0) if r is not None else 0
+                             for r in rids], jnp.int32)
+        logits, self.pools = self._decode(
+            params, self.pools, bt, slabs,
+            jnp.asarray(lengths, jnp.int32), jnp.asarray(tokens, jnp.int32),
+            jnp.int32(seed))
+        return logits
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+
+    @property
+    def page_nbytes(self) -> int:
+        return self.paging.page_nbytes
+
+    @property
+    def slab_nbytes(self) -> int:
+        return self.paging.slab_nbytes
+
+    def bytes_total(self) -> int:
+        """Usable pool bytes (scratch page/slab excluded)."""
+        return (self.usable_pages * self.page_nbytes
+                + (self.n_slabs - 1) * self.slab_nbytes)
+
+    def occupancy(self) -> float:
+        """Fraction of usable pages currently pinned."""
+        used = self.usable_pages - self.free_pages
+        return used / max(self.usable_pages, 1)
+
+    def fragmentation(self, lengths: Dict[int, int]) -> float:
+        """1 - used_tokens / allocated_token_capacity over resident requests
+        (internal fragmentation of the last partially-filled pages)."""
+        alloc_tokens = sum(len(p) for p in self.page_table.values()) \
+            * PAGE_TOKENS
+        used_tokens = sum(lengths.get(r, 0) for r in self.page_table)
+        if alloc_tokens == 0:
+            return 0.0
+        return 1.0 - used_tokens / alloc_tokens
+
+    def bank_traffic(self, rids: Sequence[int]) -> np.ndarray:
+        """Column bursts per (pseudo-channel, bank-pair) for one decode step
+        over ``rids``: every resident page is streamed once (KV attention
+        reads the whole context), every slab is read+written."""
+        burst = 32.0
+        page_lists = [self.page_table[r] for r in rids if r in self.page_table]
+        m = self.placement.traffic_map(page_lists, self.page_nbytes / burst)
+        topo = self.placement.topo
+        for r in rids:
+            s = self.slab_of.get(r)
+            if s is not None:
+                m[topo.coord(s)] += 2.0 * self.slab_nbytes / burst
+        return m

@@ -12,6 +12,23 @@ import jax.numpy as jnp
 class SamplingConfig:
     temperature: float = 0.0       # 0 => greedy
     top_k: int = 0                 # 0 => full distribution
+    top_p: float = 1.0             # 1.0 => no nucleus truncation
+
+
+def _apply_top_p(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """Nucleus filtering: keep the smallest prefix of the sorted distribution
+    whose probability mass reaches ``top_p`` (the argmax always survives)."""
+    sorted_logits = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # token i is kept iff the mass *before* it is still below top_p;
+    # the argmax always survives (so top_p=0 degrades to greedy, not to
+    # an all-masked distribution)
+    keep = (cum - probs) < top_p
+    keep = keep.at[..., 0].set(True)
+    thr = jnp.min(jnp.where(keep, sorted_logits, jnp.inf),
+                  axis=-1, keepdims=True)
+    return jnp.where(logits < thr, -jnp.inf, logits)
 
 
 def sample(logits: jnp.ndarray, cfg: SamplingConfig, key) -> jnp.ndarray:
@@ -23,4 +40,6 @@ def sample(logits: jnp.ndarray, cfg: SamplingConfig, key) -> jnp.ndarray:
         vals, _ = jax.lax.top_k(logits, cfg.top_k)
         kth = vals[..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p < 1.0:
+        logits = _apply_top_p(logits, cfg.top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,86 @@
+"""Preempting continuous-batching scheduler for the paged serving engine.
+
+Separates *policy* (who runs next, who gets evicted) from the engine's
+*mechanics* (prefill, decode, page bookkeeping):
+
+  * ``fcfs``     -- arrival order, no preemption on admission.
+  * ``priority`` -- lower ``Request.priority`` runs first; an urgent waiting
+    request may evict the least-urgent running one when the pool is full.
+  * ``deadline`` -- earliest ``Request.deadline`` first (EDF); latest
+    deadline is the preferred victim.
+
+Preemption itself is page eviction: the engine spills the victim's
+pages+slab to host memory and this queue gets the request back, to be
+re-admitted (re-pinned to fresh pages) when capacity frees up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    policy: str = "fcfs"            # fcfs | priority | deadline
+    preemption: bool = True         # allow admission-driven eviction
+    resume_boost: bool = True       # preempted work re-queues ahead of
+                                    # equal-key fresh arrivals
+
+
+class Scheduler:
+    """An ordered waiting queue plus the victim-selection policy."""
+
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        assert cfg.policy in ("fcfs", "priority", "deadline"), cfg.policy
+        self.cfg = cfg
+        self._heap: List[Tuple[tuple, int, object]] = []
+        self._seq = itertools.count()
+
+    def _key(self, req, resumed: bool = False) -> tuple:
+        boost = -1 if (resumed and self.cfg.resume_boost) else 0
+        if self.cfg.policy == "priority":
+            return (req.priority, boost, req.t_submit)
+        if self.cfg.policy == "deadline":
+            dl = req.deadline if req.deadline is not None else float("inf")
+            return (dl, boost, req.t_submit)
+        return (0, boost, req.t_submit)
+
+    # ------------- queue -------------
+
+    def push(self, req, resumed: bool = False):
+        heapq.heappush(self._heap,
+                       (self._key(req, resumed), next(self._seq), req))
+
+    def peek(self):
+        return self._heap[0][2] if self._heap else None
+
+    def pop(self):
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    # ------------- preemption policy -------------
+
+    def choose_victim(self, running: List[object],
+                      exclude: Optional[object] = None):
+        """The least-urgent running request (never ``exclude``), or None."""
+        cands = [r for r in running if r is not exclude]
+        if not cands:
+            return None
+        return max(cands, key=self._key)
+
+    def should_preempt(self, waiting, victim) -> bool:
+        """Evict ``victim`` to admit ``waiting``?  Only when the policy says
+        the waiting request is strictly more urgent -- FCFS never preempts
+        on admission (capacity-driven eviction is the engine's call)."""
+        if not self.cfg.preemption or victim is None:
+            return False
+        if self.cfg.policy == "fcfs":
+            return False
+        return self._key(waiting) < self._key(victim)

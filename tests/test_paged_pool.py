@@ -1,0 +1,331 @@
+"""Paged state/KV pool: allocation invariants, preemption round-trip,
+time-axis recapacity regression, scheduler-driven serving, sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import attention_cache as AC
+from repro.core import formats as F
+from repro.core import pimsim
+from repro.core.state_update import StateQuantConfig
+from repro.models import model as M
+from repro.serving.engine import (EngineConfig, PagedEngineConfig,
+                                  PagedServingEngine, Request, ServingEngine)
+from repro.serving.memory import (PAGE_TOKENS, BankAwarePlacement,
+                                  BankTopology, PagedStatePool, pages_for)
+from repro.serving.sampler import SamplingConfig, sample
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+@pytest.fixture(scope="module")
+def tiny_fp32():
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants
+# ---------------------------------------------------------------------------
+
+def test_placement_alloc_free_invariants():
+    topo = BankTopology(pseudo_channels=4, bank_pairs=4)
+    pl = BankAwarePlacement(33, topo)
+    assert pl.n_free == 32                       # page 0 reserved
+    a = pl.alloc(8)
+    assert a is not None and len(set(a)) == 8 and 0 not in a
+    # bank-aware: 8 pages over 16 coords -> no coordinate holds two
+    assert pl.live_map().max() == 1
+    b = pl.alloc(24)
+    assert pl.n_free == 0
+    assert pl.alloc(1) is None                   # exhausted, state unchanged
+    assert pl.n_free == 0
+    pl.free(a)
+    assert pl.n_free == 8
+    c = pl.alloc(8)
+    assert set(c) == set(a)                      # ids conserved, no leaks
+    pl.free(b)
+    pl.free(c)
+    assert pl.n_free == 32
+    assert pl.live_map().sum() == 0
+
+
+def test_pool_register_grow_release(tiny):
+    params, cfg = tiny
+    pool = PagedStatePool(cfg, n_pages=9, n_slabs=5)
+    assert pool.usable_pages == 8
+    assert pool.register(1, 2) and pool.register(2, 3)
+    assert pool.free_pages == 3
+    assert pool.grow(1, 3)
+    assert pool.free_pages == 0
+    assert not pool.grow(2, 1)                   # full, copy-free failure
+    # fragmentation: rid1 holds 5 pages / 300 tokens, rid2 3 pages / 384
+    frag = pool.fragmentation({1: 300, 2: 384})
+    assert frag == pytest.approx(1.0 - 684 / (8 * PAGE_TOKENS))
+    assert pool.occupancy() == 1.0
+    pool.release(1)
+    assert pool.free_pages == 5 and pool.free_slabs == 3
+    pool.release(2)
+    assert pool.free_pages == 8 and pool.free_slabs == 4
+
+
+def test_pimsim_scores_real_page_map():
+    sys_cfg = pimsim.SystemConfig()
+    uniform = np.full((4, 4), 10.0)
+    hot = np.zeros((4, 4))
+    hot[0, 0] = 160.0                            # same traffic, one bank pair
+    r_u = pimsim.placement_step_latency(uniform, sys_cfg)
+    r_h = pimsim.placement_step_latency(hot, sys_cfg)
+    assert r_u["conflict_factor"] == pytest.approx(1.0)
+    assert r_h["conflict_factor"] > 3.0
+    assert r_h["t_real_s"] > r_u["t_real_s"]
+
+
+# ---------------------------------------------------------------------------
+# time-axis recapacity regression (what _recapacity used to guess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["mx8", "fp16"])
+def test_recapacity_stacked_batch_divisible_by_128(fmt):
+    """B=128 stacked caches: the retired heuristic picked the first axis
+    divisible by 128 -- the *batch* axis on (G, B, T, ...) leaves -- and
+    would have resized batch instead of time.  Pin the explicit behavior."""
+    sq = StateQuantConfig(fmt=fmt, rounding="nearest", backend="jnp")
+    cache = AC.init_kv_cache(128, 256, 1, 16, sq)
+    k = jax.random.normal(jax.random.PRNGKey(0), (128, 256, 1, 16))
+    cache = AC.KVCache(
+        F.quantize(k, "mx8") if fmt == "mx8" else k.astype(jnp.float16),
+        cache.v, jnp.full((128,), 256, jnp.int32), cache.fmt,
+        cache.v_width, cache.time_axis)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), cache)
+    assert stacked.stack_offset == 1             # lengths (2, 128)
+
+    grown = AC.recapacity(stacked, 384)
+    leaf = (grown.k.payload["mantissa"] if fmt == "mx8" else grown.k)
+    assert leaf.shape[:3] == (2, 128, 384)       # time grew, batch intact
+    if fmt == "mx8":
+        assert grown.k.shape == (128, 384, 1, 16)  # logical aux follows
+        np.testing.assert_array_equal(
+            grown.k.payload["mantissa"][:, :, :256],
+            stacked.k.payload["mantissa"])
+
+    trimmed = AC.recapacity(stacked, 128)
+    leaf_t = (trimmed.k.payload["mantissa"] if fmt == "mx8" else trimmed.k)
+    assert leaf_t.shape[:3] == (2, 128, 128)
+    src = (stacked.k.payload["mantissa"] if fmt == "mx8" else stacked.k)
+    np.testing.assert_array_equal(np.asarray(leaf_t),
+                                  np.asarray(src[:, :, :128]))
+
+
+def test_kvcache_max_len_uses_time_axis():
+    sq = StateQuantConfig(fmt="mx8", rounding="nearest", backend="jnp")
+    cache = AC.init_kv_cache(2, 256, 1, 16, sq)
+    assert cache.time_axis == 1
+    assert cache.max_len == 256
+
+
+# ---------------------------------------------------------------------------
+# preemption round-trip: evict -> resume -> bit-identical logits
+# ---------------------------------------------------------------------------
+
+def test_preemption_roundtrip_bit_identical_logits(tiny):
+    params, cfg = tiny                           # mx8 + stochastic rounding
+    pool = PagedStatePool(cfg, n_pages=9, n_slabs=5)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    pr = jnp.asarray(prompt)[None]
+    logits, row = jax.jit(lambda p, b: M.prefill(p, cfg, b))(
+        params, {"tokens": pr, "targets": pr})
+    assert pool.register(7, pages_for(len(prompt)))
+    pool.insert_prefill(7, row)
+    tok = int(jnp.argmax(logits[0]))
+    lengths = np.array([12, 0], np.int32)
+    for step in (1, 2):                          # warm the caches a little
+        lg = pool.decode(params, [7, None],
+                         np.array([tok, 0], np.int32), lengths, seed=step)
+        tok = int(jnp.argmax(lg[0]))
+        lengths[0] += 1
+
+    snapshot = list(pool.pools)                  # jnp arrays are immutable
+    pages_before = list(pool.page_table[7])
+    lg_a = np.asarray(pool.decode(params, [7, None],
+                                  np.array([tok, 0], np.int32),
+                                  lengths, seed=42))
+    pool.pools = snapshot                        # rewind the committed step
+
+    sp = pool.spill(7, int(lengths[0]))          # evict to host
+    assert 7 not in pool.page_table
+    assert pool.resume(7, sp)                    # re-pin (fresh placement)
+    lg_b = np.asarray(pool.decode(params, [7, None],
+                                  np.array([tok, 0], np.int32),
+                                  lengths, seed=42))
+    np.testing.assert_array_equal(lg_a[0], lg_b[0])
+    # placement may differ; identity must not depend on physical page ids
+    assert len(pool.page_table[7]) == len(pages_before)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end serving through the paged engine
+# ---------------------------------------------------------------------------
+
+def _reference_outputs(params, cfg, prompts, n_new):
+    eng = ServingEngine(params, cfg, EngineConfig(slots=2,
+                                                  cache_capacity=384))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=n_new))
+    return {r.rid: r.output for r in eng.run()}
+
+
+def test_paged_engine_mixed_workload_matches_greedy(tiny_fp32):
+    """Short + long prompts (chunked prefill for the long one) through a
+    small pool; every request's greedy tokens must match the fixed-slot
+    engine."""
+    params, cfg = tiny_fp32
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (10, 150, 9, 40)]
+    refs = _reference_outputs(params, cfg, prompts, 5)
+
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=3, n_pages=7, n_slabs=7, prefill_chunk=128))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    for r in done:
+        assert not r.truncated
+        assert r.output == refs[r.rid], (r.rid, r.output, refs[r.rid])
+    stats = eng.stats()
+    assert stats["tokens"] == 5 * len(prompts)
+    assert 0.0 <= stats["occupancy"] <= 1.0
+    assert 0.0 <= stats["fragmentation"] < 1.0
+    assert "p99_ttft_s" in stats and "p50_tok_latency_s" in stats
+
+
+def test_paged_engine_growth_preemption_e2e(tiny_fp32):
+    """Pool too small for both requests' full contexts: one must be evicted
+    when the other's block table grows, then resume and still produce the
+    exact greedy continuation."""
+    params, cfg = tiny_fp32
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 120).astype(np.int32)
+               for _ in range(2)]
+    refs = _reference_outputs(params, cfg, prompts, 12)
+
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=2, n_pages=4, n_slabs=5, prefill_chunk=128))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+    done = eng.run()
+    assert len(done) == 2
+    assert eng.preemptions >= 1                  # growth forced an eviction
+    for r in done:
+        assert not r.truncated
+        assert r.output == refs[r.rid], (r.rid, r.output, refs[r.rid])
+
+
+def test_paged_pool_doubles_inflight_in_same_bytes(tiny_fp32):
+    """Acceptance: within the byte budget of a slots=4 x cap=256 fixed pool,
+    the paged pool keeps 2x as many short requests in flight."""
+    params, cfg = tiny_fp32
+    slots, cap = 4, 256
+    probe = PagedStatePool(cfg, n_pages=2, n_slabs=2)
+    budget = slots * ((cap // PAGE_TOKENS) * probe.page_nbytes
+                      + probe.slab_nbytes)
+
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=2 * slots, byte_budget=budget, n_pages=None,
+        n_slabs=2 * slots + 1, prefill_chunk=128))
+    assert eng.pool.bytes_total() <= budget
+    rng = np.random.default_rng(4)
+    for i in range(2 * slots):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 8 + i
+                                               ).astype(np.int32),
+                           max_new_tokens=4))
+    eng._admit()
+    assert len(eng.active) == 2 * slots          # all resident at once
+    done = eng.run()
+    assert len(done) == 2 * slots
+    assert all(len(r.output) == 4 for r in done)
+
+
+def test_paged_engine_priority_scheduling(tiny_fp32):
+    """Lower priority value finishes first when capacity forces queueing."""
+    params, cfg = tiny_fp32
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=1, n_pages=3, n_slabs=3,
+        scheduler=SchedulerConfig(policy="priority")))
+    rng = np.random.default_rng(5)
+    for i, prio in enumerate((5, 0, 3)):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 8
+                                               ).astype(np.int32),
+                           max_new_tokens=3, priority=prio))
+    done = eng.run()
+    assert [r.rid for r in done] == [1, 2, 0]    # by priority, not arrival
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit behavior
+# ---------------------------------------------------------------------------
+
+def test_scheduler_policies():
+    def mk(rid, prio=0, deadline=None, t=0.0):
+        r = Request(rid=rid, prompt=np.zeros(1, np.int32), priority=prio,
+                    deadline=deadline)
+        r.t_submit = t
+        return r
+
+    s = Scheduler(SchedulerConfig(policy="priority"))
+    a, b, c = mk(0, prio=2, t=0.0), mk(1, prio=0, t=1.0), mk(2, prio=2, t=2.0)
+    for r in (a, b, c):
+        s.push(r)
+    assert s.pop() is b and s.pop() is a and s.pop() is c
+
+    s = Scheduler(SchedulerConfig(policy="deadline"))
+    d, e = mk(0, deadline=9.0, t=0.0), mk(1, deadline=1.0, t=1.0)
+    s.push(d)
+    s.push(e)
+    assert s.pop() is e                          # EDF
+    assert s.choose_victim([d, e]) is d          # latest deadline evicted
+    assert s.should_preempt(e, d)
+    assert not s.should_preempt(d, e)
+
+    s = Scheduler(SchedulerConfig(policy="fcfs"))
+    s.push(mk(0, t=1.0))
+    assert not s.should_preempt(mk(1, t=2.0), s.peek())
+
+
+# ---------------------------------------------------------------------------
+# sampler: top-p
+# ---------------------------------------------------------------------------
+
+def test_top_p_restricts_to_nucleus():
+    logits = jnp.log(jnp.array([[0.6, 0.3, 0.08, 0.02]]))
+    key = jax.random.PRNGKey(0)
+    cfg = SamplingConfig(temperature=1.0, top_p=0.5)
+    toks = [int(sample(logits, cfg, jax.random.fold_in(key, i))[0])
+            for i in range(32)]
+    assert set(toks) == {0}                      # only the top token survives
+    cfg = SamplingConfig(temperature=1.0, top_p=0.85)
+    toks = [int(sample(logits, cfg, jax.random.fold_in(key, i))[0])
+            for i in range(64)]
+    assert set(toks) <= {0, 1} and 1 in toks
+    # top_p=1.0 leaves the distribution untouched
+    cfg = SamplingConfig(temperature=1.0, top_p=1.0)
+    toks = {int(sample(logits, cfg, jax.random.fold_in(key, i))[0])
+            for i in range(200)}
+    assert {0, 1, 2} <= toks
