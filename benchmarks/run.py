@@ -70,9 +70,9 @@ def fig5a_pim_designs():
     sys_cfg = PS.SystemConfig()
     spec = PS.PAPER_MODELS["retnet-2.7b"]
     w16 = PS.StateWorkload(128, spec.n_layers, spec.n_heads, spec.dk,
-                           spec.dv, 2.0)
+                           spec.dv, "fp16")
     w8 = PS.StateWorkload(128, spec.n_layers, spec.n_heads, spec.dk,
-                          spec.dv, 1.0)
+                          spec.dv, "mx8")
     t_gpu = PS.gpu_state_update_latency(w16, sys_cfg)
     for design, w, paper in (("time_multiplexed", w16, 2.8),
                              ("pipelined", w16, 4.3),
@@ -131,16 +131,24 @@ def fig13_latency_reduction():
 
 
 def fig15_latency_memory():
+    from repro import ops as OPS
     from repro.core import pimsim as PS
     sys_cfg = PS.SystemConfig()
     spec = PS.PAPER_MODELS["zamba2-7b"]
+    mx8 = OPS.StateQuantConfig(fmt="mx8", rounding="stochastic", backend="jnp")
     for out_len in (256, 1024, 4096):
         seq = 1024 + out_len
         lat = PS.generation_step_latency(spec, 128, seq, sys_cfg, "pimba")
-        # memory: weights + state + mx8 KV for the attention layers
-        mem = (spec.n_params * 2
-               + 128 * spec.n_layers * spec.n_heads * spec.dk * spec.dv
-               + 128 * seq * spec.attn_kv_per_tok / 2 * spec.attn_layers)
+        # memory: weights + resident state + mx8 KV, all sized by the ops'
+        # own traffic descriptors (one read pass == the resident footprint)
+        state = PS.StateWorkload(128, spec.n_layers, spec.n_heads, spec.dk,
+                                 spec.dv, "mx8").state_bytes
+        kv_plan = OPS.plan_attn_decode_dims(
+            "attn_decode", dict(B=128, T=seq, KVH=spec.attn_kv_heads,
+                                dk=spec.attn_head_dim, dv=spec.attn_head_dim,
+                                n=1), mx8)
+        mem = (spec.n_params * 2 + state
+               + OPS.traffic(kv_plan).state_read * spec.attn_layers)
         emit(f"fig15/outlen{out_len}", 0.0,
              f"step_ms={lat['total']*1e3:.2f};mem_gb={mem/1e9:.1f}")
 
@@ -148,8 +156,8 @@ def fig15_latency_memory():
 # ---------------------------------------------------------------------------
 
 def kernel_state_update():
+    from repro import ops as OPS
     from repro.core import formats as F
-    from repro.kernels import ops
     B, H, dk, dv = 8, 8, 128, 64
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     S0 = jax.random.normal(ks[0], (B, H, dv, dk))
@@ -158,25 +166,29 @@ def kernel_state_update():
     v = jax.random.normal(ks[3], (B, H, dv))
     q = jax.random.normal(ks[4], (B, H, dk))
     qS = F.mx8_quantize(S0)
-    bytes_logical = qS.nbytes_logical * 2          # read + write
     for backend in ("pallas", "jnp"):
-        fn = jax.jit(lambda s: ops.state_update(qS, d, k, v, q, s,
-                                                backend=backend))
+        cfg = OPS.StateQuantConfig(fmt="mx8", rounding="stochastic",
+                                   backend=backend)
+        # the op's own traffic descriptor is the bandwidth denominator
+        tr = OPS.traffic(OPS.plan_state_update_dims(B, H, dk, dv, cfg))
+        fn = jax.jit(lambda s, cfg=cfg: OPS.state_update_step(
+            qS, d, k, v, q, cfg, seed=s))
         us = _timeit(lambda: jax.block_until_ready(fn(jnp.int32(1))), n=3)
         emit(f"kernel/state_update/{backend}", us,
-             f"GBps_logical={bytes_logical/us*1e6/1e9:.3f};"
+             f"GBps_logical={tr.state_total/us*1e6/1e9:.3f};"
              f"ai_flops_per_byte={6*dk*dv/(2*dk*dv):.1f}")
     # fp16 baseline (the paper's GPU configuration)
     Sf = S0.astype(jnp.bfloat16)
-    fn = jax.jit(lambda s: ops.state_update_float(Sf, d, k, v, q))
+    fn = jax.jit(lambda s: OPS.state_update_float(Sf, d, k, v, q))
     us = _timeit(lambda: jax.block_until_ready(fn(0)), n=3)
     emit("kernel/state_update/fp16_baseline", us,
          f"GBps_logical={B*H*dk*dv*2*2/us*1e6/1e9:.3f}")
 
 
 def kernel_attention():
+    from repro import ops as OPS
+    from repro.core import attention_cache as AC
     from repro.core import formats as F
-    from repro.kernels import ops
     B, H, KVH, dh, T = 4, 8, 2, 128, 1024
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     q = jax.random.normal(ks[0], (B, H, dh))
@@ -184,13 +196,17 @@ def kernel_attention():
     V = jax.random.normal(ks[2], (B, T, KVH, dh))
     qK, qV = F.mx8_quantize(K), F.mx8_quantize(V)
     lengths = jnp.full((B,), T, jnp.int32)
-    cache_bytes = qK.nbytes_logical + qV.nbytes_logical
     for backend in ("pallas", "jnp"):
-        fn = jax.jit(lambda: ops.attention_decode(q, qK, qV, lengths,
-                                                  backend=backend))
+        cfg = OPS.StateQuantConfig(fmt="mx8", rounding="nearest",
+                                   backend=backend)
+        cache = AC.KVCache(qK, qV, lengths, "mx8")
+        tr = OPS.traffic(OPS.plan_attn_decode_dims(
+            "attn_decode", dict(B=B, T=T, KVH=KVH, dk=dh, dv=dh, n=1, H=H),
+            cfg))
+        fn = jax.jit(lambda: OPS.attn_decode(cache, q, cfg))
         us = _timeit(lambda: jax.block_until_ready(fn()), n=3)
         emit(f"kernel/attention_decode/{backend}", us,
-             f"GBps_logical={cache_bytes/us*1e6/1e9:.3f}")
+             f"GBps_logical={tr.state_read/us*1e6/1e9:.3f}")
 
 
 def serving_throughput():

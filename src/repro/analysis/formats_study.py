@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import formats as F
-from repro.core import state_update as SU
+from repro import ops as OPS
 
 
 def run_swamping_study(T: int = 300, dk: int = 32, dv: int = 32,
@@ -26,7 +26,6 @@ def run_swamping_study(T: int = 300, dk: int = 32, dv: int = 32,
     preserves them in expectation.  Returns {(fmt, rounding): rel_error}.
     Shared by tests and benchmarks/bench_formats.py.
     """
-    from repro.kernels import ops
     B, H = 1, 1
     d = jnp.full((B, H, dk), 0.9995)
     formats = formats or [("mx8", "nearest"), ("mx8", "stochastic"),
@@ -36,8 +35,8 @@ def run_swamping_study(T: int = 300, dk: int = 32, dv: int = 32,
                           ("fp16", "nearest")]
     errs = {}
     for fmt, rounding in formats:
-        cfg = SU.StateQuantConfig(fmt=fmt, rounding=rounding, backend="jnp")
-        qS = SU.init_state(B, H, dk, dv, cfg)
+        cfg = OPS.StateQuantConfig(fmt=fmt, rounding=rounding, backend="jnp")
+        qS = OPS.init_state(B, H, dk, dv, cfg)
         Sf = jnp.zeros((B, H, dv, dk))
         for t in range(T):
             # small increments with a persistent direction: the hard case
@@ -46,8 +45,8 @@ def run_swamping_study(T: int = 300, dk: int = 32, dv: int = 32,
             vv = 0.5 + 0.1 * jax.random.normal(
                 jax.random.PRNGKey(7 * t + 2), (B, H, dv))
             qq = jax.random.normal(jax.random.PRNGKey(7 * t + 3), (B, H, dk))
-            qS, _ = SU.state_update_step(qS, d, kk, vv, qq, cfg, seed=t)
-            Sf, _ = ops.state_update_float(Sf, d, kk, vv, qq,
+            qS, _ = OPS.state_update_step(qS, d, kk, vv, qq, cfg, seed=t)
+            Sf, _ = OPS.state_update_float(Sf, d, kk, vv, qq,
                                            dtype=jnp.float32)
         Sq = (F.dequantize(qS) if isinstance(qS, F.QuantizedTensor)
               else qS.astype(jnp.float32))

@@ -223,6 +223,9 @@ def analytic_cost(cfg, sc, *, chips: int, tp: int, fs: int, pods: int,
     q_chunk = getattr(cfg, "attn_q_chunk", 512)
     attn_stream_per_seq = (S / q_chunk) * S * kv_width * 2.0   # bf16
 
+    kv_cache, state_rw = _cache_state_bytes(cfg, sc)  # op-registry traffic
+    cache = kv_cache + state_rw
+
     out = {}
     if kind == "train":
         passes = 3.0                                  # fwd + bwd + remat
@@ -246,13 +249,11 @@ def analytic_cost(cfg, sc, *, chips: int, tp: int, fs: int, pods: int,
                + 10.0 * toks_chip * d * 2 * L / tp
                + n_attn_layers * (B / (fs * pods)) * attn_stream_per_seq
                + n_ssm * (B / (fs * pods)) * state_stream
-               + _cache_bytes(cfg, sc, n_attn_layers, n_ssm) / chips)
+               + cache / chips)
         sp_ops_p = 2.0 if getattr(cfg, "seq_parallel", True) else 2.0
         link = ((fs - 1) / fs * P / tp
                 + sp_ops_p * (tp - 1) / tp * toks_chip * d * 2 * L)
     else:  # decode
-        cache = _cache_bytes(cfg, sc, n_attn_layers, n_ssm)
-        state_rw = _state_bytes(cfg, sc, n_ssm)
         if serve_2d:
             # 2D weight-stationary serving (Pope et al.): weights stay
             # sharded over (data x model); activations all-reduce over both
@@ -272,47 +273,29 @@ def analytic_cost(cfg, sc, *, chips: int, tp: int, fs: int, pods: int,
                     + 2.0 * (tp - 1) / tp * (B / (fs * pods)) * d * 2 * L)
     out["hbm_bytes"] = hbm
     out["link_bytes"] = link
-    out["cache_bytes_total"] = _cache_bytes(cfg, sc, n_attn_layers, n_ssm)
+    out["cache_bytes_total"] = cache
     return out
 
 
-def _fmt_bytes_per_val(cfg) -> float:
-    """Stored bytes/value of the cache format (mx8 ~1.06: payload + metadata)."""
-    from repro.core.formats import FORMAT_BITS
-    fmt = cfg.state_quant.fmt
-    bits = FORMAT_BITS.get(fmt, 16.0)
-    if fmt == "mx8":
-        # stored arrays: int8 mantissa + uint8 exponent/16 + uint8 micro/16
-        bits = 9.0
-    return bits / 8.0
+# Decode-time cache/state byte counts are sourced from the SPU op
+# registry's own traffic descriptors (repro/ops): one decode step's ops are
+# enumerated by ``decode_op_plans(cfg, B, S)`` and each entry's
+# ``traffic(plan)`` supplies the bytes -- the roofline scores exactly the
+# ops the model dispatches, with no independent per-family byte formulas.
 
+def _cache_state_bytes(cfg, sc) -> Tuple[float, float]:
+    """(KV cache bytes, recurrent state bytes) of the decode-time caches.
 
-def _cache_bytes(cfg, sc, n_attn_layers: int, n_ssm: int) -> float:
-    """Total logical bytes of the decode-time caches, format-aware."""
-    if cfg.mla is not None:
-        kvw = cfg.mla.cache_width
-    else:
-        kvw = 2 * cfg.n_kv_heads * cfg.head_dim
-    bytes_per_val = _fmt_bytes_per_val(cfg)
-    return (sc.global_batch * sc.seq_len * kvw * n_attn_layers * bytes_per_val
-            + _state_bytes(cfg, sc, n_ssm))
-
-
-def _state_bytes(cfg, sc, n_ssm: int) -> float:
-    if n_ssm == 0 or cfg.ssm is None:
-        return 0.0
-    d = cfg.d_model
-    if "mamba2" in cfg.pattern:
-        H = cfg.ssm.expand * d // cfg.ssm.head_dim
-        dk_, dv_ = cfg.ssm.d_state, cfg.ssm.head_dim
-    elif "mlstm" in cfg.pattern:
-        H = cfg.ssm.n_heads or cfg.n_heads
-        dk_ = dv_ = cfg.ssm.expand * d // H
-    else:
-        H = cfg.ssm.n_heads or cfg.n_heads
-        dk_ = cfg.ssm.dk_head or cfg.head_dim
-        dv_ = cfg.ssm.dv_head or cfg.head_dim
-    return sc.global_batch * n_ssm * H * dk_ * dv_ * _fmt_bytes_per_val(cfg)
+    One attn/mla decode op streams its whole cache once, so the read side of
+    its traffic IS the cache footprint; the state footprint is one read pass
+    of every state_update op.  One registry enumeration serves both.
+    """
+    from repro.ops import decode_traffic_by_kind
+    by_kind = decode_traffic_by_kind(cfg, sc.global_batch, sc.seq_len)
+    kv = sum(t.state_read for k, t in by_kind.items()
+             if k in ("attn_decode", "mla_decode"))
+    state = by_kind.get("state_update")
+    return kv, state.state_read if state is not None else 0.0
 
 
 def model_flops_train(n_params: float, n_tokens: float) -> float:

@@ -4,6 +4,13 @@ Keys/values are packed MX8 along the head dimension (one 16-value group per
 DRAM-column-sized sub-chunk in the paper's terms).  Supports GQA caches
 (separate K and V streams) and MLA caches (a single compressed latent stream
 whose first ``v_width`` lanes double as values).
+
+This module owns the *container* (:class:`KVCache`, init, recapacity, the
+scatter primitive).  The decode-time *operators* on it -- token append and
+attention -- are registered SPU ops (``repro/ops/attention.py``); the
+:func:`append` / :func:`attend` functions here are thin wrappers kept for
+callers that hold a cache directly (imported lazily to avoid an import
+cycle: ``repro.ops.attention`` imports this module for the container).
 """
 from __future__ import annotations
 
@@ -14,8 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import formats as F
-from repro.core.state_update import StateQuantConfig
-from repro.kernels import ops
+from repro.ops.base import StateQuantConfig
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -90,28 +96,12 @@ def _update_at(buf: jnp.ndarray, rows: jnp.ndarray, idx: jnp.ndarray) -> jnp.nda
 def append(cache: KVCache, k_new: jnp.ndarray,
            v_new: Optional[jnp.ndarray], cfg: StateQuantConfig,
            seed=0) -> KVCache:
-    """Append one (or n) token(s): k_new (B, n, KVH, dk)."""
-    if isinstance(cache.k, F.QuantizedTensor):
-        bits = (F.sr_bits(k_new.shape, seed)
-                if cfg.rounding == "stochastic" else None)
-        qk = F.quantize(k_new, cache.fmt, cfg.rounding, bits)
-        payload = {f: _update_at(cache.k.payload[f], qk.payload[f], cache.lengths)
-                   for f in cache.k.payload}
-        nk = F.QuantizedTensor(cache.fmt, cache.k.shape, payload)
-        nv = None
-        if v_new is not None:
-            bits_v = (F.sr_bits(v_new.shape, seed + 1)
-                      if cfg.rounding == "stochastic" else None)
-            qv = F.quantize(v_new, cache.fmt, cfg.rounding, bits_v)
-            vpayload = {f: _update_at(cache.v.payload[f], qv.payload[f], cache.lengths)
-                        for f in cache.v.payload}
-            nv = F.QuantizedTensor(cache.fmt, cache.v.shape, vpayload)
-    else:
-        nk = _update_at(cache.k, k_new, cache.lengths)
-        nv = None if v_new is None else _update_at(cache.v, v_new, cache.lengths)
-    n = k_new.shape[1]
-    return KVCache(nk, nv, cache.lengths + n, cache.fmt, cache.v_width,
-                   cache.time_axis)
+    """Append one (or n) token(s): k_new (B, n, KVH, dk).
+
+    Registry-dispatched (op kind ``kv_append``); see repro/ops/attention.py.
+    """
+    from repro.ops.attention import kv_append
+    return kv_append(cache, k_new, v_new, cfg, seed=seed)
 
 
 def recapacity(caches, capacity: int):
@@ -160,18 +150,10 @@ def recapacity(caches, capacity: int):
 
 def attend(cache: KVCache, q: jnp.ndarray, cfg: StateQuantConfig,
            scale: Optional[float] = None) -> jnp.ndarray:
-    """Decode attention of current-token queries q (B,H,dk) vs the cache."""
-    if isinstance(cache.k, F.QuantizedTensor):
-        if cache.fmt == "mx8":
-            return ops.attention_decode(q, cache.k, cache.v, cache.lengths,
-                                        scale=scale, v_width=cache.v_width,
-                                        backend=cfg.backend)
-        kf = F.dequantize(cache.k)
-        vf = (kf[..., :cache.v_width] if cache.v is None
-              else F.dequantize(cache.v))
-    else:
-        kf = cache.k.astype(jnp.float32)
-        vf = (kf[..., :cache.v_width] if cache.v is None
-              else cache.v.astype(jnp.float32))
-    from repro.kernels import ref as _ref
-    return _ref.attention_decode_ref(q, kf, vf, cache.lengths, scale)
+    """Decode attention of current-token queries q (B,H,dk) vs the cache.
+
+    Registry-dispatched (op kind ``attn_decode`` / ``mla_decode``); backend
+    negotiation replaces the old inline mx8-vs-ref branching.
+    """
+    from repro.ops.attention import attn_decode
+    return attn_decode(cache, q, cfg, scale=scale)

@@ -68,19 +68,49 @@ class SystemConfig:
 # workload: one generation step's state updates for a whole model
 # ---------------------------------------------------------------------------
 
+#: storage format each paper system keeps its state/KV in
+SYSTEM_FMT = {"gpu": "fp16", "gpu_q": "int8", "gpu_pim": "fp16",
+              "pimba": "mx8"}
+
+
+def _op_plan(kind: str, fmt: str, dims: Dict[str, int]):
+    """Plan one SPU op on the jnp backend (timing model scores logical ops)."""
+    from repro import ops as OPS
+    quant = OPS.StateQuantConfig(fmt=fmt, rounding="stochastic",
+                                 backend="jnp")
+    return OPS.plan(kind, dims, quant, "jnp")
+
+
+def _op_traffic(plan):
+    from repro import ops as OPS
+    return OPS.traffic(plan)
+
+
 @dataclasses.dataclass(frozen=True)
 class StateWorkload:
+    """One generation step's Eq. 2 invocations, one plan per layer.
+
+    Byte counts come from the registered state-update op's own
+    ``traffic(plan)`` descriptor -- the same numbers the executing call
+    sites are accounted with -- not from a local formula.
+    """
     batch: int
     n_layers: int
     n_heads: int
     dk: int                 # dim_head in the paper's Eq. 2
     dv: int                 # dim_state
-    bytes_per_val: float    # 2.0 fp16, 1.0625 int8, 1.0 mx8
+    fmt: str = "fp16"       # storage format (fp16 GPU, int8 GPU+Q, mx8 Pimba)
+
+    @property
+    def plan(self):
+        return _op_plan("state_update", self.fmt,
+                        dict(B=self.batch, H=self.n_heads,
+                             dk=self.dk, dv=self.dv))
 
     @property
     def state_bytes(self) -> float:
-        return (self.batch * self.n_layers * self.n_heads
-                * self.dk * self.dv * self.bytes_per_val)
+        """One pass over all layers' state (read side of traffic(plan))."""
+        return self.n_layers * _op_traffic(self.plan).state_read
 
     @property
     def flops(self) -> float:
@@ -99,7 +129,8 @@ GPU_ATTN_PASSES = 1.2
 
 def gpu_state_update_latency(w: StateWorkload, sys: SystemConfig) -> float:
     """GPU baseline: bandwidth-bound read+write of the state + operands."""
-    bytes_moved = 2.0 * w.state_bytes * GPU_STATE_PASSES
+    traffic = _op_traffic(w.plan)
+    bytes_moved = w.n_layers * traffic.state_total * GPU_STATE_PASSES
     t_bw = bytes_moved / sys.hbm_bw_bytes
     t_fl = w.flops / sys.gpu_flops
     return max(t_bw, t_fl)
@@ -212,7 +243,8 @@ class ModelSpec:
     dk: int
     dv: int
     attn_layers: int = 0       # attention layers (hybrid / transformer)
-    attn_kv_per_tok: float = 0  # bytes/token/layer fp16
+    attn_kv_heads: int = 0     # KV heads per attention layer
+    attn_head_dim: int = 0
 
 
 PAPER_MODELS = {
@@ -221,9 +253,9 @@ PAPER_MODELS = {
     "hgrn2-2.7b": ModelSpec("hgrn2-2.7b", 2.7e9, 32, 20, 128, 128),
     "mamba2-2.7b": ModelSpec("mamba2-2.7b", 2.7e9, 64, 80, 128, 64),
     "zamba2-7b": ModelSpec("zamba2-7b", 7.0e9, 54, 80, 64, 64,
-                           attn_layers=9, attn_kv_per_tok=2 * 32 * 80 * 2),
+                           attn_layers=9, attn_kv_heads=32, attn_head_dim=80),
     "opt-6.7b": ModelSpec("opt-6.7b", 6.7e9, 0, 0, 0, 0,
-                          attn_layers=32, attn_kv_per_tok=2 * 32 * 128 * 2),
+                          attn_layers=32, attn_kv_heads=32, attn_head_dim=128),
 }
 
 
@@ -239,11 +271,11 @@ def generation_step_latency(spec: ModelSpec, batch: int, seq_len: int,
     t_proj = max(w_bytes / sys.hbm_bw_bytes,
                  2.0 * spec.n_params * batch / sys.gpu_flops)
 
-    bpv = {"gpu": 2.0, "gpu_q": 1.0625, "gpu_pim": 2.0, "pimba": 1.0}[system]
+    fmt = SYSTEM_FMT[system]
     t_state = 0.0
     if spec.n_layers:
         w = StateWorkload(batch, spec.n_layers, spec.n_heads, spec.dk,
-                          spec.dv, bpv)
+                          spec.dv, fmt)
         if system in ("gpu", "gpu_q"):
             t_state = gpu_state_update_latency(w, sys)
         elif system == "gpu_pim":
@@ -253,8 +285,14 @@ def generation_step_latency(spec: ModelSpec, batch: int, seq_len: int,
 
     t_attn = 0.0
     if spec.attn_layers:
-        kv_bytes = (spec.attn_kv_per_tok * seq_len * batch * spec.attn_layers
-                    * (bpv / 2.0))
+        # one attn_decode op per layer; its traffic(plan) streams the whole
+        # valid cache once (score + attend phases, read-only)
+        attn_plan = _op_plan("attn_decode", fmt,
+                             dict(B=batch, T=seq_len, H=spec.attn_kv_heads,
+                                  KVH=spec.attn_kv_heads,
+                                  dk=spec.attn_head_dim,
+                                  dv=spec.attn_head_dim, n=1))
+        kv_bytes = _op_traffic(attn_plan).state_read * spec.attn_layers
         if system in ("gpu", "gpu_q"):
             t_attn = kv_bytes * GPU_ATTN_PASSES / sys.hbm_bw_bytes
         else:

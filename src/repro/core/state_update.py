@@ -1,55 +1,34 @@
-"""The paper's core abstraction: the generalized state-update operation.
+"""DEPRECATED shim -- the generalized state update moved to ``repro.ops``.
 
-Post-transformer mixers (Mamba-2, GLA, RetNet, HGRN2, mLSTM) all reduce at
-decode time to paper Eq. 2:
+The paper's core abstraction (Eq. 2)
 
     S_t = d_t ⊙ S_{t-1} + k_t v_tᵀ ;   y_t = S_tᵀ q_t
 
-This module provides the *stateful container* and the step function that the
-model zoo and the serving engine build on.  The state lives in a configurable
-storage format (fp32/bf16/fp16 baselines, int8, or the paper's MX8) and is
-re-quantized with stochastic rounding every step -- the property Pimba's
-accuracy results rest on (paper §3.2).
+is now a registered SPU operator: see ``repro/ops/state_update.py`` for the
+implementations and ``repro/ops/registry.py`` for (kind x backend x format)
+dispatch.  This module remains importable so external scripts keep working:
 
-Storage layout for quantized states is ``(B, H, dv, dk)`` (Sᵀ) with MX groups
-along dk; see kernels/mx_state_update.py for why.
+* ``StateQuantConfig`` / ``StateLike`` / ``init_state`` / ``state_nbytes``
+  re-export the canonical ``repro.ops`` objects (no warning -- they are
+  configuration, not dispatch).
+* ``state_update_step`` still works but emits
+  :class:`~repro.ops.base.SpuDeprecationWarning` and forwards to
+  ``repro.ops.state_update_step`` (results are identical -- it *is* the
+  same registered op underneath).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple, Union
+import warnings
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import formats as F
-from repro.kernels import ops
+from repro.ops.base import SpuDeprecationWarning, StateQuantConfig  # noqa: F401
+from repro.ops.state_update import (StateLike, init_state,  # noqa: F401
+                                    state_nbytes)
 
-
-@dataclasses.dataclass(frozen=True)
-class StateQuantConfig:
-    """How recurrent state (and KV caches) are stored."""
-    fmt: str = "mx8"                 # fp32|bf16|fp16|fp8_e4m3|fp8_e5m2|int8|mx8
-    rounding: str = "stochastic"     # nearest|stochastic
-    backend: str = "pallas"          # pallas|jnp
-
-    @property
-    def quantized(self) -> bool:
-        return self.fmt in ("mx8", "int8", "fp8_e4m3", "fp8_e5m2")
-
-
-StateLike = Union[F.QuantizedTensor, jnp.ndarray]
-
-
-def init_state(B: int, H: int, dk: int, dv: int,
-               cfg: StateQuantConfig) -> StateLike:
-    """Zero-initialized recurrent state, stored layout (B, H, dv, dk)."""
-    zeros = jnp.zeros((B, H, dv, dk), jnp.float32)
-    if not cfg.quantized:
-        dt = {"fp32": jnp.float32, "bf16": jnp.bfloat16,
-              "fp16": jnp.float16}[cfg.fmt]
-        return zeros.astype(dt)
-    return F.quantize(zeros, cfg.fmt)
+__all__ = ["StateQuantConfig", "StateLike", "init_state", "state_nbytes",
+           "state_update_step"]
 
 
 def state_update_step(
@@ -57,28 +36,10 @@ def state_update_step(
     d: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, q: jnp.ndarray,
     cfg: StateQuantConfig, seed=0,
 ) -> Tuple[StateLike, jnp.ndarray]:
-    """One decode step of Eq. 2 on the stored state.
-
-    d: (B,H,dk) or (B,H,1); k,q: (B,H,dk); v: (B,H,dv)  ->  y: (B,H,dv) f32.
-    """
-    if isinstance(state, F.QuantizedTensor):
-        if state.fmt == "mx8":
-            return ops.state_update(state, d, k, v, q, seed,
-                                    rounding=cfg.rounding, backend=cfg.backend)
-        # int8 / fp8 paths: jnp reference semantics (used by the format study)
-        B, H, dv, dk = state.shape
-        St = F.dequantize(state)
-        d_ = jnp.broadcast_to(d.astype(jnp.float32), (B, H, dk))[:, :, None, :]
-        Sn = St * d_ + (v.astype(jnp.float32)[..., :, None]
-                        * k.astype(jnp.float32)[..., None, :])
-        bits = F.sr_bits(Sn.shape, seed) if cfg.rounding == "stochastic" else None
-        qSn = F.quantize(Sn, state.fmt, cfg.rounding, bits)
-        y = jnp.einsum("bhvk,bhk->bhv", F.dequantize(qSn), q.astype(jnp.float32))
-        return qSn, y
-    Sn, y = ops.state_update_float(state, d, k, v, q, dtype=state.dtype)
-    return Sn, y
-
-
-def state_nbytes(B: int, H: int, dk: int, dv: int, cfg: StateQuantConfig) -> float:
-    """Logical storage bytes of one layer's state (bandwidth accounting)."""
-    return B * H * dk * dv * F.FORMAT_BITS[cfg.fmt] / 8.0
+    """Deprecated: use :func:`repro.ops.state_update_step`."""
+    warnings.warn(
+        "repro.core.state_update.state_update_step is deprecated; use "
+        "repro.ops.state_update_step (registry-dispatched SPU op)",
+        SpuDeprecationWarning, stacklevel=2)
+    from repro.ops.state_update import state_update_step as _step
+    return _step(state, d, k, v, q, cfg, seed=seed)

@@ -1,34 +1,28 @@
-"""Public jit'd entry points for the Pallas kernels, with pure-jnp fallbacks.
+"""DEPRECATED shim -- kernel entry points moved to the ``repro.ops`` registry.
 
-Dispatch policy
----------------
-``backend='pallas'``  -- the fused Pallas kernels (``interpret=True`` here on
-                         CPU; compiled natively on real TPUs).
-``backend='jnp'``     -- mathematically identical pure-jnp path.  This is what
-                         the multi-pod **dry-run lowers**: interpret-mode
-                         pallas would trace its grid as an unrolled Python
-                         loop (compile-time explosion at production sizes)
-                         and would distort cost analysis.  XLA fuses the
-                         dequant→update→requant chain, so HLO bytes match the
-                         kernel's logical traffic closely (verified in
-                         EXPERIMENTS.md §Roofline).
-
-Numerics are identical between backends (bitwise for the packed state).
+The ``backend=`` keyword dispatch that used to live here is now capability
+negotiation in ``repro/ops/registry.py`` (op kind x backend x format), and
+the implementations are registered SpuOps in ``repro/ops/state_update.py``
+and ``repro/ops/attention.py``.  These wrappers keep external scripts
+working: they emit :class:`~repro.ops.base.SpuDeprecationWarning` and
+forward to the registry, returning bit-identical results.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import formats as F
-from repro.kernels import ref as _ref
-from repro.kernels.mx_attention import mx_attention_decode as _attn_pallas
-from repro.kernels.mx_quant import mx_quantize as _quant_pallas
-from repro.kernels.mx_state_update import mx_state_update as _su_pallas
+from repro.ops.base import SpuDeprecationWarning, StateQuantConfig
 
 DEFAULT_BACKEND = "pallas"
+
+
+def _warn(old: str, new: str):
+    warnings.warn(f"repro.kernels.ops.{old} is deprecated; use {new}",
+                  SpuDeprecationWarning, stacklevel=3)
 
 
 def state_update(
@@ -36,26 +30,19 @@ def state_update(
     d: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, q: jnp.ndarray,
     seed, *, rounding: str = "stochastic", backend: str = DEFAULT_BACKEND,
 ) -> Tuple[F.QuantizedTensor, jnp.ndarray]:
-    """Fused quantized state update; state layout (B, H, dv, dk)."""
-    if backend == "pallas":
-        return _su_pallas(qS, d, k, v, q, jnp.asarray(seed, jnp.int32),
-                          rounding=rounding, interpret=True)
-    return _ref.quantized_state_update_stored_ref(
-        qS, d, k, v, q, rounding=rounding, seed=seed)
+    """Deprecated: use repro.ops.state_update_step."""
+    _warn("state_update", "repro.ops.state_update_step")
+    from repro import ops as OPS
+    cfg = StateQuantConfig(fmt=qS.fmt, rounding=rounding, backend=backend)
+    return OPS.state_update_step(qS, d, k, v, q, cfg, seed=seed)
 
 
 def state_update_float(S: jnp.ndarray, d, k, v, q,
                        dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Unquantized baseline (the paper's "GPU" fp16 configuration).
-
-    State layout (B, H, dv, dk) to match the quantized path.
-    """
-    St = S.astype(jnp.float32)
-    d_ = jnp.broadcast_to(d.astype(jnp.float32), St.shape[:2] + St.shape[-1:])
-    Sn = St * d_[:, :, None, :] + (v.astype(jnp.float32)[..., :, None]
-                                   * k.astype(jnp.float32)[..., None, :])
-    y = jnp.einsum("bhvk,bhk->bhv", Sn, q.astype(jnp.float32))
-    return Sn.astype(dtype), y
+    """Deprecated: use repro.ops.state_update_float."""
+    _warn("state_update_float", "repro.ops.state_update_float")
+    from repro.ops.state_update import state_update_float as _f
+    return _f(S, d, k, v, q, dtype=dtype)
 
 
 def attention_decode(
@@ -65,19 +52,21 @@ def attention_decode(
     *, scale: Optional[float] = None, v_width: Optional[int] = None,
     t_block: int = 128, backend: str = DEFAULT_BACKEND,
 ) -> jnp.ndarray:
-    """Fused decode attention over packed MX8 KV cache (GQA or MLA)."""
-    if backend == "pallas":
-        return _attn_pallas(q, qK, qV, lengths, scale=scale,
-                            v_width=v_width, t_block=t_block, interpret=True)
-    if qV is None:  # MLA: values are a prefix slice of the latent cache
-        kf = F.dequantize(qK)
-        return _ref.attention_decode_ref(q, kf, kf[..., :v_width], lengths, scale)
-    return _ref.mx_attention_decode_ref(q, qK, qV, lengths, scale)
+    """Deprecated: use repro.ops.attn_decode on a KVCache."""
+    _warn("attention_decode", "repro.ops.attn_decode")
+    from repro.core.attention_cache import KVCache
+    from repro.ops.attention import attn_decode
+    cache = KVCache(qK, qV, lengths, qK.fmt, v_width)
+    cfg = StateQuantConfig(fmt=qK.fmt, rounding="nearest", backend=backend)
+    return attn_decode(cache, q, cfg, scale=scale, t_block=t_block)
 
 
 def quantize_mx8(x: jnp.ndarray, seed=0, *, rounding: str = "nearest",
                  backend: str = DEFAULT_BACKEND) -> F.QuantizedTensor:
-    """MX8 quantization (groups along last axis)."""
+    """Deprecated: use repro.core.formats.quantize / kernels.mx_quant."""
+    _warn("quantize_mx8", "repro.core.formats.quantize")
     if backend == "pallas":
+        from repro.kernels.mx_quant import mx_quantize as _quant_pallas
         return _quant_pallas(x, seed, rounding=rounding, interpret=True)
+    from repro.kernels import ref as _ref
     return _ref.mx_quantize_ref(x, rounding=rounding, seed=seed)

@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as OPS
 from repro.analysis import roofline as RL
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, cell_supported, get_config
-from repro.core.state_update import StateQuantConfig
 from repro.dist import sharding as SH
 from repro.launch import specs as SP
 from repro.launch.mesh import make_parallel
@@ -36,11 +36,18 @@ from repro.models.config import SHAPES
 from repro.train import optimizer as O
 from repro.train.train_loop import make_train_step
 
-DRYRUN_QUANT = StateQuantConfig(fmt="mx8", rounding="stochastic",
-                                backend="jnp")  # see kernels/ops.py docstring
+# the dry run forces the jnp backend: interpret-mode pallas would trace its
+# grid as an unrolled Python loop (compile-time explosion at production
+# sizes) and distort cost analysis -- see repro/ops/state_update.py
+DRYRUN_QUANT = OPS.StateQuantConfig(fmt="mx8", rounding="stochastic",
+                                    backend="jnp")
 
 
 def dryrun_config(arch: str, **overrides):
+    # fail fast if the forced (op, format, backend) triple ever unregisters
+    for kind in OPS.OP_KINDS:
+        OPS.resolve_backend(kind, DRYRUN_QUANT.fmt, DRYRUN_QUANT.backend,
+                            strict=True)
     cfg = get_config(arch).with_(
         param_dtype="bfloat16",
         state_quant=DRYRUN_QUANT,

@@ -29,6 +29,15 @@ def main(argv=None):
     ap.add_argument("--cache-capacity", type=int, default=256)
     ap.add_argument("--state-format", default="mx8",
                     choices=["mx8", "int8", "fp16", "fp32"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "jnp"],
+                    help="SPU op backend; 'auto' asks the op registry for "
+                         "the preferred backend capable of --state-format. "
+                         "A concrete choice errors if any SPU compute op "
+                         "the model runs (state_update / attn_decode / "
+                         "mla_decode) lacks that (op, format, backend) "
+                         "registration; kv_append is jnp-only by design "
+                         "and always negotiates")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 disables)")
@@ -52,8 +61,8 @@ def main(argv=None):
 
     import jax
     import numpy as np
+    from repro import ops as OPS
     from repro.configs import get_config, get_smoke_config
-    from repro.core.state_update import StateQuantConfig
     from repro.models import model as M
     from repro.serving.engine import (EngineConfig, PagedEngineConfig,
                                       PagedServingEngine, Request,
@@ -65,8 +74,23 @@ def main(argv=None):
            else get_config(args.arch))
     if cfg.encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: nothing to serve")
-    backend = "pallas" if args.state_format == "mx8" else "jnp"
-    cfg = cfg.with_(state_quant=StateQuantConfig(
+    # capability lookup in the SPU op registry (replaces the old inline
+    # "pallas if mx8 else jnp" heuristic): every SPU *compute* op this model
+    # dispatches must support a concrete requested triple, so a bad
+    # --backend fails up front; kv_append (a scatter, jnp-only by design)
+    # always negotiates, as does everything under --backend auto
+    requested = None if args.backend == "auto" else args.backend
+    compute_kinds = sorted({e.kind for e in OPS.decode_op_plans(cfg, 1, 128)}
+                           - {"kv_append"})
+    try:
+        resolved = [OPS.resolve_backend(kind, args.state_format, requested,
+                                        strict=requested is not None)
+                    for kind in compute_kinds]
+        backend = resolved[0] if resolved else OPS.resolve_backend(
+            "state_update", args.state_format, requested)
+    except ValueError as e:
+        raise SystemExit(f"--backend {args.backend}: {e}")
+    cfg = cfg.with_(state_quant=OPS.StateQuantConfig(
         fmt=args.state_format, rounding="stochastic", backend=backend))
 
     params = M.init_model(jax.random.PRNGKey(0), cfg)
@@ -112,7 +136,13 @@ def main(argv=None):
     print(f"{len(done)} requests, {stats['tokens']} tokens, "
           f"{stats['tokens_per_s']:.1f} tok/s "
           f"(wall {time.perf_counter()-t0:.1f}s, state={args.state_format}, "
-          f"pool={pool})")
+          f"backend={backend}, pool={pool})")
+    traffic = {k.split("/", 1)[1]: v for k, v in stats.items()
+               if k.startswith("op_traffic_bytes/")}
+    if traffic:
+        total = sum(traffic.values())
+        parts = " ".join(f"{k}={v/1e6:.1f}MB" for k, v in traffic.items())
+        print(f"  spu op traffic: {parts} (total {total/1e6:.1f}MB)")
     for k in ("mean_ttft_s", "p50_ttft_s", "p99_ttft_s",
               "p50_tok_latency_s", "p99_tok_latency_s"):
         if k in stats:

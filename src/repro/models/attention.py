@@ -3,7 +3,8 @@
 Training/prefill use a memory-efficient blockwise ("flash") formulation in
 pure JAX -- the paper runs prefill on the GPU in compute-intensive form, and
 on TPU the MXU-friendly einsum form is the analogue.  Decode uses the
-MX8-quantized KV cache and the fused Pallas kernel (repro.core.attention_cache).
+MX8-quantized KV cache through the registered SPU ops (``kv_append`` +
+``attn_decode``/``mla_decode``, repro/ops/attention.py) in one unified step.
 
 MLA runs in *absorbed* form everywhere: queries are projected into the
 compressed-latent space so the cache is a single (kv_lora + rope) stream --
@@ -19,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as OPS
 from repro.core import attention_cache as AC
 from repro.models import layers as L
 from repro.models.config import ModelConfig
@@ -252,8 +254,9 @@ def attention_decode(p: L.Params, x: jnp.ndarray, cache: AC.KVCache,
     if cfg.pos_emb == "rope":
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-    cache = AC.append(cache, k, v, cfg.state_quant, seed=seed)
-    o = AC.attend(cache, q.reshape(B, H, dh), cfg.state_quant)  # (B,H,dh) f32
+    # one registered SPU op step: kv_append + attn_decode via the registry
+    o, cache = OPS.attention_decode_step(cache, k, v, q.reshape(B, H, dh),
+                                         cfg.state_quant, seed=seed)
     return (o.reshape(B, 1, H * dh).astype(x.dtype) @ p["wo"]), cache
 
 
@@ -332,8 +335,10 @@ def mla_decode(p: L.Params, x: jnp.ndarray, cache: AC.KVCache,
     H = cfg.n_heads
     q = _mla_queries(p, x, cfg, positions).reshape(B, H, -1)
     ckv = _mla_cache_stream(p, x, cfg, positions)[:, :, None, :]  # (B,1,1,cw)
-    cache = AC.append(cache, ckv, None, cfg.state_quant, seed=seed)
     scale = (m.nope_dim + m.rope_dim) ** -0.5
-    ctx = AC.attend(cache, q, cfg.state_quant, scale=scale)  # (B,H,kv_lora)
+    # same unified SPU op step as GQA; the cache's v_width selects mla_decode
+    ctx, cache = OPS.attention_decode_step(cache, ckv, None, q,
+                                           cfg.state_quant, scale=scale,
+                                           seed=seed)  # (B,H,kv_lora)
     o = jnp.einsum("bhc,hcv->bhv", ctx.astype(x.dtype), p["w_uv"])
     return o.reshape(B, 1, H * m.v_dim) @ p["wo"], cache

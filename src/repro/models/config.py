@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-from repro.core.state_update import StateQuantConfig
+from repro.ops.base import StateQuantConfig
 
 
 @dataclasses.dataclass(frozen=True)

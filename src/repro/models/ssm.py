@@ -1,7 +1,7 @@
 """State-update mixers: Mamba-2, GLA, RetNet, HGRN2, mLSTM, sLSTM.
 
 All of these share the generalized state-update decode step (paper Eq. 2,
-repro.core.state_update).  Training/prefill run in the "compute-intensive
+the ``state_update`` SPU op in repro.ops).  Training/prefill run in the "compute-intensive
 form" the paper assigns to the GPU: a chunked linear-attention formulation
 (the SSD duality of Dao & Gu) that is MXU-friendly -- quadratic within small
 chunks, recurrent across chunks.
@@ -10,7 +10,10 @@ Two chunked engines cover every family member:
   * scalar per-step decay (Mamba-2 dt·a, RetNet γ_h, mLSTM sigmoid-f)
   * vector per-step decay  (GLA per-channel gates, HGRN2 forget gates)
 
-Decode uses the MX8-quantized state and the fused Pallas kernel.
+Decode routes every family through ONE registered SPU op invocation
+(:func:`_spu_state_update` -> ``repro.ops.state_update_step``); what differs
+per family is only the decay/gating hook that produces Eq. 2's d_t
+(``_DECAY_HOOKS``) and the pre/post projections around the op.
 """
 from __future__ import annotations
 
@@ -21,13 +24,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as OPS
 from repro.core import formats as F
-from repro.core import state_update as SU
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 
 Params = dict
 MixerState = Dict[str, object]
+
+
+def _spu_state_update(state, decay, k, v, q, cfg: ModelConfig, seed):
+    """The one decode-time Eq. 2 invocation shared by every state family.
+
+    Dispatches through the SPU op registry (kind ``state_update``, backend
+    negotiated from ``cfg.state_quant``); see repro/ops/state_update.py.
+    """
+    return OPS.state_update_step(state, decay, k, v, q, cfg.state_quant,
+                                 seed=seed)
+
+
+#: per-family decode decay hooks: log-decay (as produced by the shared qkv
+#: projections) -> Eq. 2 d_t.  Scalar families feed (B,H,1); vector-gated
+#: families feed the per-channel (B,H,dk) gate.
+_DECAY_HOOKS = {
+    "gla": lambda log_f: jnp.exp(log_f[:, :, 0]),          # (B,H,dk)
+    "hgrn2": lambda log_f: jnp.exp(log_f[:, :, 0]),        # (B,H,dk)
+    "retnet": lambda log_f: jnp.exp(log_f[..., :1]),       # (B,H,1)
+    "mamba2": lambda log_f: jnp.exp(log_f),                # (B,H,1)
+    "mlstm": lambda log_f: jnp.exp(log_f),                 # (B,H,1)
+}
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +197,7 @@ def shard_heads(x: jnp.ndarray, par) -> jnp.ndarray:
     return jax.lax.with_sharding_constraint(x, par.named(P(*dims)))
 
 
-def _store_state(S_logical: jnp.ndarray, cfg: ModelConfig) -> SU.StateLike:
+def _store_state(S_logical: jnp.ndarray, cfg: ModelConfig) -> OPS.StateLike:
     """(B,H,dk,dv) f32 -> stored container (B,H,dv,dk)."""
     St = jnp.swapaxes(S_logical, -1, -2)
     sq = cfg.state_quant
@@ -295,7 +320,7 @@ def mamba2_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
 def mamba2_init_state(B: int, cfg: ModelConfig) -> MixerState:
     d_inner, H, N, P = _m2_dims(cfg)
     dt = jnp.dtype(cfg.param_dtype)
-    return {"S": SU.init_state(B, H, N, P, cfg.state_quant),
+    return {"S": OPS.init_state(B, H, N, P, cfg.state_quant),
             "conv_x": jnp.zeros((B, cfg.ssm.d_conv - 1, d_inner), dt),
             "conv_bc": jnp.zeros((B, cfg.ssm.d_conv - 1, 2 * N), dt)}
 
@@ -317,15 +342,14 @@ def mamba2_decode(p: Params, x: jnp.ndarray, state: MixerState,
 
     dt_f = jax.nn.softplus(dt_.astype(jnp.float32) + p["dt_bias"])  # (B,H)
     a = -jnp.exp(p["A_log"])
-    decay = jnp.exp(dt_f * a)[..., None]                            # (B,H,1)
+    decay = _DECAY_HOOKS["mamba2"]((dt_f * a)[..., None])           # (B,H,1)
 
     k = jnp.broadcast_to(Bv[:, None, :], (B, H, N))
     q = jnp.broadcast_to(Cv[:, None, :], (B, H, N))
     xh = xin.reshape(B, H, P)
     v = xh * dt_f[..., None]
 
-    Sn, y = SU.state_update_step(state["S"], decay, k, v, q,
-                                 cfg.state_quant, seed=seed)        # y (B,H,P)
+    Sn, y = _spu_state_update(state["S"], decay, k, v, q, cfg, seed)  # y (B,H,P)
     y = y + p["D"][None, :, None] * xh
     y = y.reshape(B, d_inner).astype(x.dtype)
     y = L.rmsnorm_gated(y, p["norm"]["scale"], z, cfg.norm_eps)
@@ -427,7 +451,7 @@ def gla_family_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
 
 def gla_family_init_state(B: int, cfg: ModelConfig) -> MixerState:
     H, dk, dv = _gla_dims(cfg)
-    return {"S": SU.init_state(B, H, dk, dv, cfg.state_quant)}
+    return {"S": OPS.init_state(B, H, dk, dv, cfg.state_quant)}
 
 
 def gla_family_decode(p: Params, x: jnp.ndarray, state: MixerState,
@@ -437,12 +461,8 @@ def gla_family_decode(p: Params, x: jnp.ndarray, state: MixerState,
     H, dk, dv = _gla_dims(cfg)
     q, k, v, log_f = _gla_family_qkv(p, x, cfg, kind)      # (B,H,1,*)
     q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
-    if kind == "retnet":
-        decay = jnp.exp(log_f[..., :1])                    # (B,H,1)
-    else:
-        decay = jnp.exp(log_f[:, :, 0])                    # (B,H,dk)
-    Sn, y = SU.state_update_step(state["S"], decay, k, v, q,
-                                 cfg.state_quant, seed=seed)
+    decay = _DECAY_HOOKS[kind](log_f)
+    Sn, y = _spu_state_update(state["S"], decay, k, v, q, cfg, seed)
     y = L.head_rmsnorm(y, cfg.norm_eps).reshape(B, 1, H * dv)
     gate = jax.nn.silu(x @ p["wg_out"])
     out = (y.astype(x.dtype) * gate) @ p["wo"]
@@ -532,7 +552,7 @@ def mlstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
 
 def mlstm_init_state(B: int, cfg: ModelConfig) -> MixerState:
     d_up, H, dk, dv, dv_aug = _mlstm_dims(cfg)
-    return {"S": SU.init_state(B, H, dk, dv_aug, cfg.state_quant),
+    return {"S": OPS.init_state(B, H, dk, dv_aug, cfg.state_quant),
             "conv": jnp.zeros((B, cfg.ssm.d_conv - 1, d_up),
                               jnp.dtype(cfg.param_dtype))}
 
@@ -548,9 +568,9 @@ def mlstm_decode(p: Params, x: jnp.ndarray, state: MixerState,
     q, k_eff, v_aug, log_f = _mlstm_gates_qkv(
         p, u[:, None], uc[:, None], cfg)
     q, k_eff, v_aug = q[:, :, 0], k_eff[:, :, 0], v_aug[:, :, 0]
-    decay = jnp.exp(log_f)                                  # (B,H,1)->(B,H,1)
-    Sn, y_aug = SU.state_update_step(state["S"], decay, k_eff, v_aug, q,
-                                     cfg.state_quant, seed=seed)
+    decay = _DECAY_HOOKS["mlstm"](log_f)                    # (B,H,1)
+    Sn, y_aug = _spu_state_update(state["S"], decay, k_eff, v_aug, q,
+                                  cfg, seed)
     y, n_dot = y_aug[..., :dv], y_aug[..., dv]
     h = y / jnp.maximum(jnp.abs(n_dot), 1.0)[..., None]
     h = L.head_rmsnorm(h, cfg.norm_eps) * p["hnorm"][None]

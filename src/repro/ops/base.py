@@ -1,0 +1,189 @@
+"""Core vocabulary of the unified SPU operator API.
+
+Pimba's architectural claim (paper §4, Eq. 2) is that attention decode and
+post-transformer state updates are the *same* memory-bound operation class,
+served by one shared State-update Processing Unit.  This package mirrors
+that claim in software: every decode-time memory-bound op is an
+:class:`SpuOp` registered by ``(kind, backend, format)`` and invoked through
+one dispatch point (``repro.ops.registry``).
+
+The op life-cycle is split in three so that *what runs* and *what is
+accounted* can never diverge:
+
+``plan(dims, quant_cfg, **options) -> OpPlan``
+    Pure metadata: captures the op kind, chosen backend, storage format,
+    rounding mode and the canonical problem dimensions.  Plans are hashable
+    and jit-stable; they are the unit the cost models consume.
+
+``execute(state, inputs, plan) -> (state', out)``
+    Runs the op on device.  ``state`` is the resident operand (recurrent
+    state container or KV cache), ``inputs`` the per-step streamed operands.
+
+``traffic(plan) -> TrafficBytes``
+    The op's own logical DRAM traffic descriptor.  ``core/pimsim.py`` and
+    ``analysis/roofline.py`` source their byte counts from here, so the
+    simulator scores exactly the ops the model ran -- there is no second,
+    hand-maintained byte formula to drift out of sync.
+
+Byte accounting uses the *logical* stored bits per value
+(``repro.core.formats.FORMAT_BITS``; MX8 averages 8 bits/value), matching
+the paper's bandwidth arithmetic.  The software containers pad MX8 to 9
+stored bits (byte-aligned mantissa + uint8 exponent/16 + uint8 micro/16);
+that packing overhead is a host-representation artifact, not SPU traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.core import formats as F
+
+
+class SpuDeprecationWarning(DeprecationWarning):
+    """Raised by the pre-registry entry points (``repro.kernels.ops``,
+    ``repro.core.state_update.state_update_step``).
+
+    A distinct subclass so CI can run first-party tests under
+    ``-W error::repro.ops.base.SpuDeprecationWarning`` without tripping on
+    unrelated third-party DeprecationWarnings.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class StateQuantConfig:
+    """How recurrent state (and KV caches) are stored.
+
+    ``backend`` is a *request*, not a guarantee: dispatch goes through
+    :func:`repro.ops.registry.resolve_backend`, which falls back to a capable
+    backend when the requested one is not registered for ``(kind, fmt)``
+    (e.g. the fused Pallas kernels only exist for MX8).
+    """
+    fmt: str = "mx8"                 # fp32|bf16|fp16|fp8_e4m3|fp8_e5m2|int8|mx8
+    rounding: str = "stochastic"     # nearest|stochastic
+    backend: str = "pallas"          # pallas|jnp (preference, see above)
+
+    @property
+    def quantized(self) -> bool:
+        return self.fmt in ("mx8", "int8", "fp8_e4m3", "fp8_e5m2")
+
+
+def fmt_bits(fmt: str) -> float:
+    """Logical stored bits per value of ``fmt`` (single source of truth)."""
+    return F.FORMAT_BITS[fmt]
+
+
+#: accounting policy for the per-step streamed tensors, shared by every op's
+#: traffic descriptor: operands (d/k/v/q, new KV rows) stream in bf16 in
+#: production, results leave in f32.
+OPERAND_BYTES = 2.0
+OUTPUT_BYTES = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficBytes:
+    """Logical DRAM bytes one op invocation moves, by stream.
+
+    ``state_read``/``state_write`` are the resident operand (recurrent state
+    or KV cache) -- the memory-bound term Pimba accelerates.  ``operand_read``
+    is the per-step streamed inputs (d/k/v/q), ``output_write`` the per-step
+    result.  All floats: MX formats have fractional bytes per value.
+    """
+    state_read: float = 0.0
+    state_write: float = 0.0
+    operand_read: float = 0.0
+    output_write: float = 0.0
+
+    @property
+    def state_total(self) -> float:
+        return self.state_read + self.state_write
+
+    @property
+    def total(self) -> float:
+        return (self.state_read + self.state_write
+                + self.operand_read + self.output_write)
+
+    def scaled(self, n: float) -> "TrafficBytes":
+        return TrafficBytes(self.state_read * n, self.state_write * n,
+                            self.operand_read * n, self.output_write * n)
+
+    def __add__(self, o: "TrafficBytes") -> "TrafficBytes":
+        return TrafficBytes(self.state_read + o.state_read,
+                            self.state_write + o.state_write,
+                            self.operand_read + o.operand_read,
+                            self.output_write + o.output_write)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpPlan:
+    """Immutable, hashable description of one op invocation.
+
+    ``dims`` and ``options`` are sorted (name, value) tuples so plans can be
+    dict keys and jit static arguments.  Use :meth:`dim` / :meth:`opt` to
+    read them back.
+    """
+    kind: str
+    backend: str
+    fmt: str
+    rounding: str
+    dims: Tuple[Tuple[str, int], ...]
+    options: Tuple[Tuple[str, Any], ...] = ()
+
+    def dim(self, name: str) -> int:
+        for k, v in self.dims:
+            if k == name:
+                return v
+        raise KeyError(f"plan for {self.kind} has no dim {name!r}; "
+                       f"has {[k for k, _ in self.dims]}")
+
+    def opt(self, name: str, default: Any = None) -> Any:
+        for k, v in self.options:
+            if k == name:
+                return v
+        return default
+
+    @property
+    def bits_per_val(self) -> float:
+        return fmt_bits(self.fmt)
+
+
+class SpuOp:
+    """One (kind, backend) operator implementation.
+
+    Subclasses set ``kind``, ``backend`` and ``formats`` (the storage formats
+    this implementation can execute -- the capability the registry negotiates
+    over) and implement ``execute`` and ``traffic``.
+    """
+
+    kind: str = ""
+    backend: str = ""
+    formats: Tuple[str, ...] = ()
+
+    def plan(self, dims: Mapping[str, int], quant: StateQuantConfig,
+             **options) -> OpPlan:
+        if quant.fmt not in self.formats:
+            raise ValueError(
+                f"op {self.kind!r} backend {self.backend!r} does not support "
+                f"format {quant.fmt!r} (supports {self.formats})")
+        return OpPlan(kind=self.kind, backend=self.backend, fmt=quant.fmt,
+                      rounding=quant.rounding,
+                      dims=tuple(sorted(dims.items())),
+                      options=tuple(sorted(options.items())))
+
+    def execute(self, state: Any, inputs: Dict[str, Any],
+                plan: OpPlan) -> Tuple[Any, Any]:
+        raise NotImplementedError
+
+    def traffic(self, plan: OpPlan) -> TrafficBytes:
+        raise NotImplementedError
+
+
+def fmt_of_state(state: Any) -> str:
+    """Storage format of a state container (QuantizedTensor or array)."""
+    if isinstance(state, F.QuantizedTensor):
+        return state.fmt
+    import jax.numpy as jnp
+    name = {jnp.float32: "fp32", jnp.bfloat16: "bf16",
+            jnp.float16: "fp16"}.get(jnp.dtype(state.dtype).type)
+    if name is None:
+        raise ValueError(f"unrecognized unquantized state dtype {state.dtype}")
+    return name

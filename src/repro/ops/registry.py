@@ -1,0 +1,134 @@
+"""The SPU operator registry: (op kind x backend x format) dispatch.
+
+Every decode-time memory-bound op registers an :class:`~repro.ops.base.SpuOp`
+implementation here.  Call sites never pick a backend with ad-hoc
+heuristics; they ask :func:`resolve_backend` for a capable one (preferring
+the fused Pallas kernels when registered for the format) or demand an exact
+triple with ``strict=True``, which raises a clear error listing what *is*
+registered.
+
+Op kinds
+--------
+``state_update``  -- generalized Eq. 2 decode step (Mamba-2 / GLA / RetNet /
+                     HGRN2 / mLSTM recurrent state)
+``attn_decode``   -- one-token GQA attention over a packed KV cache
+``mla_decode``    -- one-token MLA attention over the compressed latent cache
+``kv_append``     -- quantize + scatter new K/V (or latent) rows into a cache
+
+Extending: subclass ``SpuOp``, set ``kind``/``backend``/``formats``,
+implement ``execute`` and ``traffic``, and call :func:`register` at import
+time (see ``repro/ops/state_update.py`` for the canonical example).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.ops.base import OpPlan, SpuOp, StateQuantConfig, TrafficBytes
+
+OP_KINDS = ("state_update", "attn_decode", "mla_decode", "kv_append")
+
+#: backend preference for capability negotiation ("auto" requests)
+BACKEND_PREFERENCE = ("pallas", "jnp")
+
+_REGISTRY: Dict[Tuple[str, str, str], SpuOp] = {}
+
+
+def register(op) -> SpuOp:
+    """Register one implementation under every format it supports.
+
+    Accepts an instance or an SpuOp subclass (usable as a class decorator).
+    A triple already owned by a *different* implementation is an error --
+    silent replacement would switch dispatch and traffic accounting with no
+    trace; re-registering the same class (module reload) is idempotent.
+    """
+    inst = op() if isinstance(op, type) else op
+    if inst.kind not in OP_KINDS:
+        raise ValueError(f"unknown op kind {inst.kind!r}; kinds: {OP_KINDS}")
+    for fmt in inst.formats:
+        key = (inst.kind, inst.backend, fmt)
+        cur = _REGISTRY.get(key)
+        if cur is not None and (type(cur).__module__, type(cur).__qualname__) \
+                != (type(inst).__module__, type(inst).__qualname__):
+            raise ValueError(
+                f"op triple {key} already registered by "
+                f"{type(cur).__qualname__}; refusing to overwrite with "
+                f"{type(inst).__qualname__}")
+        _REGISTRY[key] = inst
+    return op
+
+
+def registered() -> List[Tuple[str, str, str]]:
+    """Sorted (kind, backend, fmt) triples currently registered."""
+    return sorted(_REGISTRY)
+
+
+def supports(kind: str, fmt: str, backend: str) -> bool:
+    return (kind, backend, fmt) in _REGISTRY
+
+
+def backends_for(kind: str, fmt: str) -> List[str]:
+    """Capable backends for (kind, fmt), in preference order."""
+    found = {b for (k, b, f) in _REGISTRY if k == kind and f == fmt}
+    ordered = [b for b in BACKEND_PREFERENCE if b in found]
+    return ordered + sorted(found - set(ordered))
+
+
+def _describe(kind: Optional[str] = None) -> str:
+    rows = [t for t in registered() if kind is None or t[0] == kind]
+    if not rows:
+        return "(registry is empty)"
+    return ", ".join(f"{k}[{b}:{f}]" for k, b, f in rows)
+
+
+def resolve_backend(kind: str, fmt: str, requested: Optional[str] = None,
+                    *, strict: bool = False) -> str:
+    """Capability negotiation for one (kind, fmt).
+
+    ``requested=None`` (or ``"auto"``) picks the preferred capable backend.
+    A concrete ``requested`` is honored when registered; otherwise ``strict``
+    raises with the full capability listing, and non-strict mode falls back
+    to a capable backend (the historical behavior of the inline
+    ``"pallas" if fmt == "mx8" else "jnp"`` heuristic, which this replaces).
+    """
+    capable = backends_for(kind, fmt)
+    if not capable:
+        raise ValueError(
+            f"no backend registered for op {kind!r} with format {fmt!r}; "
+            f"registered ops: {_describe()}")
+    if requested in (None, "auto"):
+        return capable[0]
+    if requested in capable:
+        return requested
+    if strict:
+        raise ValueError(
+            f"backend {requested!r} is not registered for op {kind!r} with "
+            f"format {fmt!r} (capable: {capable}); registered ops: "
+            f"{_describe(kind)}")
+    return capable[0]
+
+
+def get_op(kind: str, backend: str, fmt: str) -> SpuOp:
+    try:
+        return _REGISTRY[(kind, backend, fmt)]
+    except KeyError:
+        raise KeyError(
+            f"op {kind!r} backend {backend!r} format {fmt!r} is not "
+            f"registered; registered ops: {_describe(kind)}") from None
+
+
+def plan(kind: str, dims, quant: StateQuantConfig,
+         backend: Optional[str] = None, *, strict: bool = False,
+         **options) -> OpPlan:
+    """Resolve a backend for (kind, quant.fmt) and build the op's plan."""
+    b = resolve_backend(kind, quant.fmt, backend, strict=strict)
+    return get_op(kind, b, quant.fmt).plan(dims, quant, **options)
+
+
+def execute(state, inputs, p: OpPlan):
+    """Dispatch one planned invocation to its registered implementation."""
+    return get_op(p.kind, p.backend, p.fmt).execute(state, inputs, p)
+
+
+def traffic(p: OpPlan) -> TrafficBytes:
+    """The registered op's own traffic descriptor for ``p``."""
+    return get_op(p.kind, p.backend, p.fmt).traffic(p)

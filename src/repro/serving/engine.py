@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as OPS
 from repro.core import attention_cache as AC
 from repro.core import formats as F
 from repro.models import model as M
@@ -57,6 +58,45 @@ class EngineConfig:
     slots: int = 4                    # decode batch size
     cache_capacity: int = 256         # max context per slot (tile-aligned)
     sampling: SamplingConfig = SamplingConfig()
+
+
+class _OpTrafficMeter:
+    """Accumulates per-op-kind SPU traffic over decode steps.
+
+    Bytes come from the registered ops' own ``traffic(plan)`` descriptors
+    (``repro.ops.decode_traffic_by_kind``) at each active row's real context
+    length, so the serving stats attribute bandwidth between attention and
+    state-update ops with the same numbers the cost models use.  Per-row
+    traffic is affine in the context length, so the descriptors are probed
+    once at two lengths and each step costs O(kinds), not O(rows) registry
+    walks -- no per-slot Python work in the decode loop.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.by_kind: Dict[str, float] = {}
+        self._affine = None            # kind -> (bytes at T=1, bytes per +1 T)
+
+    def _coeffs(self) -> Dict[str, tuple]:
+        if self._affine is None:
+            t1 = OPS.decode_traffic_by_kind(self.cfg, 1, 1)
+            t2 = OPS.decode_traffic_by_kind(self.cfg, 1, 2)
+            self._affine = {k: (t1[k].total, t2[k].total - t1[k].total)
+                            for k in t1}
+        return self._affine
+
+    def account_step(self, lengths) -> None:
+        lens = [max(int(L), 1) for L in lengths]
+        if not lens:
+            return
+        n, total_len = len(lens), sum(lens)
+        for kind, (base, slope) in self._coeffs().items():
+            self.by_kind[kind] = (self.by_kind.get(kind, 0.0)
+                                  + n * base + (total_len - n) * slope)
+
+    def stats(self) -> Dict[str, float]:
+        return {f"op_traffic_bytes/{k}": v
+                for k, v in sorted(self.by_kind.items())}
 
 
 def _percentile_stats(done: List[Request],
@@ -114,6 +154,7 @@ class ServingEngine:
         self.done: List[Request] = []
         self.step_count = 0
         self.step_times: List[float] = []
+        self._traffic = _OpTrafficMeter(cfg)
         self._key = jax.random.PRNGKey(0)
 
         self._decode = jax.jit(partial(M.decode_step, cfg=cfg,
@@ -145,6 +186,7 @@ class ServingEngine:
         out = {"tokens": toks, "wall_s": t1 - t0,
                "tokens_per_s": toks / max(t1 - t0, 1e-9)}
         out.update(_percentile_stats(self.done, self.step_times))
+        out.update(self._traffic.stats())
         return out
 
     # ------------- internals -------------
@@ -201,6 +243,7 @@ class ServingEngine:
         # one host sync for the whole step, not one per slot
         lengths_np = np.asarray(self.lengths)
         self.step_times.append(time.perf_counter() - t0)
+        self._traffic.account_step(lengths_np[self.active])
         for slot in np.flatnonzero(self.active):
             req = self.slot_req[slot]
             req.output.append(int(toks_np[slot]))
@@ -276,6 +319,7 @@ class PagedServingEngine:
         self.done: List[Request] = []
         self.step_count = 0
         self.step_times: List[float] = []
+        self._traffic = _OpTrafficMeter(cfg)
         self.preemptions = 0
         self._occ: List[float] = []
         self._frag: List[float] = []
@@ -323,6 +367,7 @@ class PagedServingEngine:
                "fragmentation": (float(np.mean(self._frag))
                                  if self._frag else 0.0)}
         out.update(_percentile_stats(self.done, self.step_times))
+        out.update(self._traffic.stats())
         return out
 
     def bank_report(self) -> Dict[str, float]:
@@ -456,6 +501,12 @@ class PagedServingEngine:
         self._key, sub = jax.random.split(self._key)
         toks_np = np.asarray(sample(logits, self.pcfg.sampling, sub))
         self.step_times.append(time.perf_counter() - t0)
+        # account at the attended length: the step appends one token at
+        # `length` and attends over length+1 (matches ServingEngine, which
+        # accounts after its post-step lengths increment)
+        self._traffic.account_step(
+            [lengths[row] + 1 for row, rid in enumerate(self.rows)
+             if rid is not None])
 
         rids = [r for r in self.rows if r is not None]
         self.last_traffic = self.pool.bank_traffic(rids)

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# optional in the execution environment; CI installs it (see ci.yml).
+# importorskip keeps the module COLLECTABLE either way -- a module-level
+# ImportError would abort the whole suite's collection, not just this file.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import formats as F
 

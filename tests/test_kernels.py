@@ -1,9 +1,16 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bitwise state."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bitwise state.
+
+The backend-parity sweep at the bottom iterates the SPU op REGISTRY rather
+than a hardcoded kernel list: for every (op kind, format) with more than one
+registered backend, all backends must produce bit-identical packed state and
+matching outputs.  Registering a new backend automatically enrolls it."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import ops as OPS
+from repro.core import attention_cache as AC
 from repro.core import formats as F
 from repro.kernels import ref
 from repro.kernels.mx_attention import mx_attention_decode
@@ -124,3 +131,74 @@ def test_quant_kernel_bitwise(rounding, shape):
     qr = ref.mx_quantize_ref(x, rounding=rounding, seed=9)
     for f in ("mantissa", "exponent", "micro"):
         assert jnp.array_equal(qk.payload[f], qr.payload[f]), f
+
+
+# ---------------------------------------------------------------------------
+# registry-driven backend parity: every (op kind, format) with >1 backend
+# ---------------------------------------------------------------------------
+
+def _multi_backend_cases():
+    """(kind, fmt) pairs with more than one registered backend."""
+    cases = {}
+    for kind, backend, fmt in OPS.registered():
+        cases.setdefault((kind, fmt), set()).add(backend)
+    return sorted((k, f, tuple(sorted(bs)))
+                  for (k, f), bs in cases.items() if len(bs) > 1)
+
+
+PARITY_CASES = _multi_backend_cases()
+
+
+def _assert_state_identical(a, b, ctx):
+    if isinstance(a, F.QuantizedTensor):
+        for f in a.payload:
+            assert jnp.array_equal(a.payload[f], b.payload[f]), (ctx, f)
+    else:
+        assert jnp.array_equal(a, b), ctx
+
+
+@pytest.mark.parametrize("kind,fmt,backends", PARITY_CASES,
+                         ids=[f"{k}-{f}" for k, f, _ in PARITY_CASES])
+@pytest.mark.parametrize("rounding", ["nearest", "stochastic"])
+def test_registry_backend_parity(kind, fmt, backends, rounding):
+    """All registered backends of a (kind, fmt) agree: bit-identical packed
+    state, matching outputs."""
+    B, H, KVH, dk, dv, T = 2, 4, 2, 64, 32, 128
+    results = []
+    for backend in backends:
+        cfg = OPS.StateQuantConfig(fmt=fmt, rounding=rounding,
+                                   backend=backend)
+        assert OPS.resolve_backend(kind, fmt, backend, strict=True) == backend
+        if kind == "state_update":
+            S0 = OPS.init_state(B, H, dk, dv, cfg)
+            ks = jax.random.split(jax.random.PRNGKey(0), 4)
+            d = jax.nn.sigmoid(jax.random.normal(ks[0], (B, H, dk)))
+            k = jax.random.normal(ks[1], (B, H, dk))
+            v = jax.random.normal(ks[2], (B, H, dv))
+            q = jax.random.normal(ks[3], (B, H, dk))
+            Sn, y = OPS.state_update_step(S0, d, k, v, q, cfg, seed=11)
+            results.append((backend, Sn, y))
+        elif kind in ("attn_decode", "mla_decode"):
+            ks = jax.random.split(jax.random.PRNGKey(1), 3)
+            if kind == "mla_decode":
+                cache = AC.init_kv_cache(B, T, 1, dk + dv, cfg,
+                                         mla_v_width=dk)
+                kv, vv = jax.random.normal(ks[0], (B, 1, 1, dk + dv)), None
+                q = jax.random.normal(ks[1], (B, H, dk + dv))
+            else:
+                cache = AC.init_kv_cache(B, T, KVH, dk, cfg)
+                kv = jax.random.normal(ks[0], (B, 1, KVH, dk))
+                vv = jax.random.normal(ks[2], (B, 1, KVH, dk))
+                q = jax.random.normal(ks[1], (B, H, dk))
+            for step in range(3):
+                cache = AC.append(cache, kv, vv, cfg, seed=step)
+            y = OPS.attn_decode(cache, q, cfg)
+            results.append((backend, cache.k, y))
+        else:
+            pytest.skip(f"{kind}: single-backend kinds are not parity cases")
+    (b0, S_ref, y_ref), rest = results[0], results[1:]
+    for backend, Sn, y in rest:
+        _assert_state_identical(S_ref, Sn, (kind, fmt, b0, backend))
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y),
+                                   rtol=2e-4, atol=2e-5,
+                                   err_msg=f"{kind}/{fmt}: {b0} vs {backend}")

@@ -1,0 +1,215 @@
+"""The unified SPU operator API: registry dispatch, capability negotiation,
+traffic descriptors as the single byte-count source, and the deprecation
+shims over the pre-registry entry points."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ops as OPS
+from repro.core import attention_cache as AC
+from repro.core import formats as F
+from repro.ops.base import SpuDeprecationWarning
+
+
+# ---------------------------------------------------------------------------
+# registry / capability negotiation
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_kinds_and_formats():
+    triples = OPS.registered()
+    kinds = {k for k, _, _ in triples}
+    assert kinds == set(OPS.OP_KINDS)
+    # jnp covers every storage format for every kind
+    for kind in OPS.OP_KINDS:
+        for fmt in ("mx8", "int8", "fp8_e4m3", "fp8_e5m2", "fp32", "bf16",
+                    "fp16"):
+            assert OPS.supports(kind, fmt, "jnp"), (kind, fmt)
+    # the fused pallas kernels exist exactly for MX8 compute ops
+    assert OPS.supports("state_update", "mx8", "pallas")
+    assert OPS.supports("attn_decode", "mx8", "pallas")
+    assert OPS.supports("mla_decode", "mx8", "pallas")
+    assert not OPS.supports("state_update", "fp16", "pallas")
+
+
+def test_resolve_backend_negotiation():
+    # auto prefers pallas where registered, else jnp
+    assert OPS.resolve_backend("state_update", "mx8") == "pallas"
+    assert OPS.resolve_backend("state_update", "int8") == "jnp"
+    # explicit capable request is honored
+    assert OPS.resolve_backend("state_update", "mx8", "jnp") == "jnp"
+    # incapable request: non-strict falls back (historical heuristic) ...
+    assert OPS.resolve_backend("state_update", "fp16", "pallas") == "jnp"
+    # ... strict errors, and the error names the registered capability set
+    with pytest.raises(ValueError, match="not registered"):
+        OPS.resolve_backend("state_update", "fp16", "pallas", strict=True)
+    with pytest.raises(ValueError, match="no backend registered"):
+        OPS.resolve_backend("state_update", "fp4_imaginary")
+
+
+def test_get_op_unknown_triple_lists_registry():
+    with pytest.raises(KeyError, match="registered ops"):
+        OPS.get_op("attn_decode", "pallas", "fp32")
+
+
+def test_serve_backend_flag_errors_clearly():
+    """--backend pallas with a non-mx8 format must fail up front."""
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit, match="not registered"):
+        main(["--arch", "mamba2-2.7b", "--smoke-size", "--requests", "1",
+              "--state-format", "fp16", "--backend", "pallas"])
+
+
+# ---------------------------------------------------------------------------
+# traffic descriptors
+# ---------------------------------------------------------------------------
+
+def test_state_update_traffic_matches_format_bits():
+    B, H, dk, dv = 4, 8, 128, 64
+    for fmt, bpv in (("fp16", 2.0), ("int8", 1.0625), ("mx8", 1.0)):
+        cfg = OPS.StateQuantConfig(fmt=fmt, rounding="nearest", backend="jnp")
+        t = OPS.traffic(OPS.plan_state_update_dims(B, H, dk, dv, cfg))
+        assert t.state_read == pytest.approx(B * H * dk * dv * bpv)
+        assert t.state_write == pytest.approx(t.state_read)
+        assert t.total > t.state_total > 0
+
+
+def test_attn_decode_traffic_scales_with_cache():
+    cfg = OPS.StateQuantConfig(fmt="mx8", rounding="nearest", backend="jnp")
+    dims = dict(B=2, T=256, KVH=4, dk=64, dv=64, n=1, H=8)
+    t1 = OPS.traffic(OPS.plan_attn_decode_dims("attn_decode", dims, cfg))
+    dims2 = dict(dims, T=512)
+    t2 = OPS.traffic(OPS.plan_attn_decode_dims("attn_decode", dims2, cfg))
+    assert t2.state_read == pytest.approx(2 * t1.state_read)
+    assert t1.state_read == pytest.approx(2 * 256 * 4 * (64 + 64) * 1.0)
+
+
+def test_pimsim_bytes_sourced_from_op_traffic():
+    """The timing model's workload bytes ARE the registered op's traffic."""
+    from repro.core import pimsim as PS
+    w = PS.StateWorkload(8, 4, 2, 64, 32, "mx8")
+    t = OPS.traffic(w.plan)
+    assert w.state_bytes == pytest.approx(w.n_layers * t.state_read)
+
+
+def test_roofline_bytes_sourced_from_op_traffic():
+    import dataclasses
+    from repro.analysis import roofline as RL
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("zamba2-2.7b")
+
+    @dataclasses.dataclass
+    class SC:
+        global_batch: int = 4
+        seq_len: int = 256
+
+    sc = SC()
+    by_kind = OPS.decode_traffic_by_kind(cfg, sc.global_batch, sc.seq_len)
+    kv, state = RL._cache_state_bytes(cfg, sc)
+    assert state == pytest.approx(by_kind["state_update"].state_read)
+    assert kv == pytest.approx(by_kind["attn_decode"].state_read)
+
+
+def test_decode_op_plans_cover_model_families():
+    from repro.configs import get_smoke_config
+    kinds = {e.kind for e in
+             OPS.decode_op_plans(get_smoke_config("zamba2-2.7b"), 2, 128)}
+    assert kinds == {"state_update", "attn_decode", "kv_append"}
+    kinds = {e.kind for e in
+             OPS.decode_op_plans(get_smoke_config("deepseek-v2-236b"), 2, 128)}
+    assert kinds == {"mla_decode", "kv_append"}
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (external scripts keep working, bit-identically)
+# ---------------------------------------------------------------------------
+
+def _su_inputs(B=2, H=2, dk=32, dv=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    S0 = jax.random.normal(ks[0], (B, H, dv, dk))
+    d = jax.nn.sigmoid(jax.random.normal(ks[1], (B, H, dk)))
+    k = jax.random.normal(ks[2], (B, H, dk))
+    v = jax.random.normal(ks[3], (B, H, dv))
+    q = jax.random.normal(ks[4], (B, H, dk))
+    return F.mx8_quantize(S0), d, k, v, q
+
+
+def test_kernels_ops_state_update_shim():
+    from repro.kernels import ops as KOPS
+    qS, d, k, v, q = _su_inputs()
+    cfg = OPS.StateQuantConfig(fmt="mx8", rounding="stochastic",
+                               backend="pallas")
+    Sn, y = OPS.state_update_step(qS, d, k, v, q, cfg, seed=3)
+    with pytest.warns(SpuDeprecationWarning):
+        Sn2, y2 = KOPS.state_update(qS, d, k, v, q, 3)
+    for f in ("mantissa", "exponent", "micro"):
+        assert jnp.array_equal(Sn.payload[f], Sn2.payload[f]), f
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_core_state_update_step_shim():
+    from repro.core import state_update as SU
+    qS, d, k, v, q = _su_inputs(seed=1)
+    cfg = SU.StateQuantConfig(fmt="mx8", rounding="stochastic", backend="jnp")
+    Sn, y = OPS.state_update_step(qS, d, k, v, q, cfg, seed=7)
+    with pytest.warns(SpuDeprecationWarning):
+        Sn2, y2 = SU.state_update_step(qS, d, k, v, q, cfg, seed=7)
+    for f in ("mantissa", "exponent", "micro"):
+        assert jnp.array_equal(Sn.payload[f], Sn2.payload[f]), f
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_kernels_ops_attention_decode_shim():
+    from repro.kernels import ops as KOPS
+    B, H, KVH, dh, T = 2, 4, 2, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    K = jax.random.normal(ks[1], (B, T, KVH, dh))
+    V = jax.random.normal(ks[2], (B, T, KVH, dh))
+    qK, qV = F.mx8_quantize(K), F.mx8_quantize(V)
+    lengths = jnp.array([100, 64], jnp.int32)
+    cache = AC.KVCache(qK, qV, lengths, "mx8")
+    cfg = OPS.StateQuantConfig(fmt="mx8", rounding="nearest", backend="pallas")
+    y = OPS.attn_decode(cache, q, cfg)
+    with pytest.warns(SpuDeprecationWarning):
+        y2 = KOPS.attention_decode(q, qK, qV, lengths)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_shim_modules_import_without_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SpuDeprecationWarning)
+        import importlib
+        import repro.core.state_update
+        import repro.kernels.ops
+        importlib.reload(repro.kernels.ops)
+        importlib.reload(repro.core.state_update)
+        # config-object re-exports stay silent too
+        repro.core.state_update.StateQuantConfig(fmt="fp32")
+
+
+# ---------------------------------------------------------------------------
+# unified entry point: GQA + MLA decode through one op step
+# ---------------------------------------------------------------------------
+
+def test_attention_decode_step_unifies_gqa_and_mla():
+    cfg = OPS.StateQuantConfig(fmt="mx8", rounding="stochastic",
+                               backend="pallas")
+    B, KVH, dh, T = 2, 2, 32, 128
+    cache = AC.init_kv_cache(B, T, KVH, dh, cfg)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    kv = jax.random.normal(ks[0], (B, 1, KVH, dh))
+    q = jax.random.normal(ks[1], (B, 4, dh))
+    out, cache = OPS.attention_decode_step(cache, kv, kv, q, cfg, seed=0)
+    assert out.shape == (B, 4, dh)
+    assert int(cache.lengths[0]) == 1
+    # MLA: latent-only cache; v_width routes to the mla_decode op
+    mla_cache = AC.init_kv_cache(B, T, 1, 96, cfg, mla_v_width=64)
+    ckv = jax.random.normal(ks[2], (B, 1, 1, 96))
+    qm = jax.random.normal(ks[1], (B, 4, 96))
+    out_m, mla_cache = OPS.attention_decode_step(mla_cache, ckv, None, qm,
+                                                 cfg, scale=0.1, seed=0)
+    assert out_m.shape == (B, 4, 64)
+    assert OPS.attn_kind_of(mla_cache) == "mla_decode"

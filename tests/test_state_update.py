@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import formats as F
-from repro.core import state_update as SU
+from repro import ops as OPS
 from repro.kernels import ref
 from repro.models.ssm import chunked_la_scalar, chunked_la_vector
 
@@ -60,17 +60,16 @@ def test_quantized_stream_tracks_float_stream():
     B, H, dk, dv, T = 1, 2, 64, 32, 200
     ks = jax.random.split(jax.random.PRNGKey(2), 4)
     d = jax.nn.sigmoid(jax.random.normal(ks[0], (B, H, dk)) + 2.0)
-    cfg = SU.StateQuantConfig(fmt="mx8", rounding="stochastic")
-    qS = SU.init_state(B, H, dk, dv, cfg)
+    cfg = OPS.StateQuantConfig(fmt="mx8", rounding="stochastic")
+    qS = OPS.init_state(B, H, dk, dv, cfg)
     Sf = jnp.zeros((B, H, dv, dk))
     errs = []
     for t in range(T):
         kk = jax.random.normal(jax.random.PRNGKey(3 * t + 1), (B, H, dk))
         vv = jax.random.normal(jax.random.PRNGKey(3 * t + 2), (B, H, dv))
         qq = jax.random.normal(jax.random.PRNGKey(3 * t + 3), (B, H, dk))
-        qS, yq = SU.state_update_step(qS, d, kk, vv, qq, cfg, seed=t)
-        from repro.kernels import ops
-        Sf, yf = ops.state_update_float(Sf, d, kk, vv, qq, dtype=jnp.float32)
+        qS, yq = OPS.state_update_step(qS, d, kk, vv, qq, cfg, seed=t)
+        Sf, yf = OPS.state_update_float(Sf, d, kk, vv, qq, dtype=jnp.float32)
         errs.append(float(jnp.linalg.norm(yq - yf) / jnp.linalg.norm(yf)))
     # error stays bounded -- no swamping divergence
     assert np.mean(errs[-20:]) < 0.15, np.mean(errs[-20:])
@@ -106,8 +105,7 @@ def test_decode_matches_prefill_state_handoff():
     _, S_pre = chunked_la_scalar(q[:, :, :S], k[:, :, :S], v[:, :, :S],
                                  log_a[..., :S], chunk=8)
     # decode step S+1 on the float path (stored layout = transposed)
-    from repro.kernels import ops
-    Sn, y_dec = ops.state_update_float(
+    Sn, y_dec = OPS.state_update_float(
         jnp.swapaxes(S_pre, -1, -2), jnp.exp(log_a[..., S])[..., None],
         k[:, :, S], v[:, :, S], q[:, :, S], dtype=jnp.float32)
     y_all, _ = _seq_reference(q, k, v, log_a)

@@ -134,7 +134,8 @@ def test_loss_decreases():
 def test_pimsim_fig5_ratios():
     sys_cfg = PS.SystemConfig()
     spec = PS.PAPER_MODELS["retnet-2.7b"]
-    w = PS.StateWorkload(128, spec.n_layers, spec.n_heads, spec.dk, spec.dv, 2.0)
+    w = PS.StateWorkload(128, spec.n_layers, spec.n_heads, spec.dk, spec.dv,
+                         "fp16")
     t_gpu = PS.gpu_state_update_latency(w, sys_cfg)
     tm = t_gpu / PS.pim_state_update_latency(w, sys_cfg, "time_multiplexed")
     pl = t_gpu / PS.pim_state_update_latency(w, sys_cfg, "pipelined")

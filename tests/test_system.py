@@ -3,12 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# optional in the execution environment; CI installs it (see ci.yml)
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import attention_cache as AC
 from repro.core import formats as F
-from repro.core import state_update as SU
-from repro.kernels import ops
+from repro import ops
 
 
 # ---------------------------------------------------------------------------
@@ -63,9 +65,9 @@ def test_quantized_update_bounded_drift(seed):
     k = jax.random.normal(ks[2], (1, 1, dk))
     v = jax.random.normal(ks[3], (1, 1, dv))
     q = jnp.ones((1, 1, dk))
-    cfg = SU.StateQuantConfig()
+    cfg = ops.StateQuantConfig()
     qS = F.mx8_quantize(S0)
-    qn, yq = SU.state_update_step(qS, d, k, v, q, cfg, seed=seed)
+    qn, yq = ops.state_update_step(qS, d, k, v, q, cfg, seed=seed)
     Sf, yf = ops.state_update_float(F.dequantize(qS), d, k, v, q,
                                     dtype=jnp.float32)
     rel = float(jnp.linalg.norm(F.dequantize(qn) - Sf)
@@ -81,7 +83,7 @@ def test_quantized_update_bounded_drift(seed):
 @given(st.integers(1, 6))
 def test_cache_append_then_attend_prefix_invariance(n_tok):
     """Tokens appended after position L never change attention at length L."""
-    cfg = SU.StateQuantConfig()
+    cfg = ops.StateQuantConfig()
     B, KVH, dh, T = 1, 2, 32, 128
     cache = AC.init_kv_cache(B, T, KVH, dh, cfg)
     ks = jax.random.split(jax.random.PRNGKey(n_tok), 3)
@@ -99,7 +101,7 @@ def test_cache_append_then_attend_prefix_invariance(n_tok):
 
 
 def test_cache_append_roundtrip_values():
-    cfg = SU.StateQuantConfig()
+    cfg = ops.StateQuantConfig()
     B, KVH, dh, T = 2, 1, 16, 128
     cache = AC.init_kv_cache(B, T, KVH, dh, cfg)
     k0 = jnp.ones((B, 1, KVH, dh)) * 0.5
@@ -122,7 +124,7 @@ def test_e2e_quantized_vs_float_generation():
     toks = {}
     for fmt in ("fp32", "mx8"):
         cfg = get_smoke_config("mamba2-2.7b").with_(
-            state_quant=SU.StateQuantConfig(fmt=fmt, rounding="stochastic",
+            state_quant=ops.StateQuantConfig(fmt=fmt, rounding="stochastic",
                                             backend="jnp"))
         params = M.init_model(jax.random.PRNGKey(7), cfg)
         prompt = jax.random.randint(jax.random.PRNGKey(8), (1, 16), 0,
