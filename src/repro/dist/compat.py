@@ -1,0 +1,66 @@
+"""Backfills for jax APIs this tree codes against that are absent from the
+pinned jax 0.4.x: ``jax.shard_map``, ``jax.sharding.AxisType``, and the
+``axis_types=`` keyword of ``jax.make_mesh``.
+
+Every sharded path in the repo reaches a ``Parallel`` (and therefore this
+package) before touching those APIs, so installing the backfills from
+``repro.dist.__init__`` covers all call sites -- including the subprocess
+bodies in ``tests/test_sharding.py`` -- without editing them.
+
+:func:`install` is idempotent and only adds what is missing; on a jax that
+already ships these APIs it is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (sharding-in-types modes).
+
+    Pre-AxisType jax has exactly one behavior -- GSPMD auto propagation --
+    which is what every mesh in this tree requests (``Auto``), so the value
+    is accepted and dropped by the :func:`install`'d ``make_mesh`` wrapper.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters \
+            and not getattr(jax.make_mesh, "_repro_compat", False):
+        _make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            del axis_types            # pre-AxisType jax: every axis is Auto
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of a Python constant folds to the static axis size
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+            # check_vma is the new-jax name for check_rep
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma, **kw)
+
+        shard_map._repro_compat = True
+        jax.shard_map = shard_map

@@ -1,0 +1,248 @@
+"""Sharding layout for train / serve / dry-run steps.
+
+One :class:`Parallel` describes the mesh topology (which axes carry data
+parallelism, which one carries tensor parallelism); the builder functions
+below turn it into concrete ``NamedSharding`` trees for every pytree a step
+function touches:
+
+* :func:`param_shardings`     -- Megatron-TP on the trailing weight dim plus
+  FSDP/ZeRO over the intra-pod data axis (params live sharded over tp x fs;
+  GSPMD all-gathers the fs shards per use, so per-chip weight reads ~= P/tp
+  -- see analysis/roofline.py).
+* :func:`opt_state_shardings` -- AdamW moments follow the param layout
+  (ZeRO: the fs factor already shards them), ``step`` replicated.
+* :func:`batch_shardings`     -- leading batch dim over all data axes.
+* :func:`cache_shardings`     -- decode caches; batch/time axes are located
+  exactly by probing :func:`repro.models.model.abstract_decode_caches` at
+  two batch sizes and two capacities (same technique as serving/memory),
+  never guessed from shapes.
+* :func:`replicated`          -- the trivial layout.
+
+Layout rules only ever shard a dim that divides evenly; anything else
+falls back to replication, so every builder is total over the model zoo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallel:
+    """A mesh plus the roles of its axes.
+
+    ``data_axes`` carry pure data parallelism (the optional leading 'pod'
+    axis is the inter-pod DCN network -- see launch/mesh.py); ``model_axis``
+    carries tensor/expert parallelism.
+    """
+
+    mesh: jax.sharding.Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel degree (size of the model axis)."""
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def fsdp_axes(self) -> Tuple[str, ...]:
+        """Data axes that participate in param/ZeRO sharding.
+
+        The 'pod' axis is excluded: params are replicated across pods so
+        only gradient all-reduces cross the slow inter-pod network.
+        """
+        return tuple(a for a in self.data_axes if a != "pod")
+
+    @property
+    def fsdp(self) -> int:
+        """FSDP/ZeRO degree (intra-pod data-parallel size)."""
+        out = 1
+        for a in self.fsdp_axes:
+            out *= int(self.mesh.shape[a])
+        return out
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """PartitionSpec entry for the batch dim (all data axes)."""
+        return tuple(self.data_axes)
+
+    @property
+    def batch_size_divisor(self) -> int:
+        """Global batch sizes must divide this to shard over batch_axes."""
+        out = 1
+        for a in self.data_axes:
+            out *= int(self.mesh.shape[a])
+        return out
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def replicated(par: Parallel) -> NamedSharding:
+    return par.named(P())
+
+
+# ---------------------------------------------------------------------------
+# params / optimizer
+# ---------------------------------------------------------------------------
+
+def _key_names(path) -> list:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+        else:
+            names.append(str(k))
+    return names
+
+
+def param_shardings(params: Any, cfg, par: Parallel) -> Any:
+    """NamedSharding tree mirroring ``params`` (arrays or SDS).
+
+    Per weight: the larger of the two trailing dims that divides tp is
+    tensor-parallel; the first logical dim (after the scan-stack axis of
+    ``groups`` leaves, which must stay unsharded -- the layer scan slices
+    it every step) is FSDP-sharded over the intra-pod data axes.  MoE
+    expert banks shard their expert dim over the model axis instead, the
+    layout ``apply_moe``'s expert-parallel shard_map consumes directly.
+    1-D leaves (norm scales, gates) are replicated.
+    """
+    tp, fsdp = par.tp, par.fsdp
+
+    def one(path, leaf):
+        names = _key_names(path)
+        shape = tuple(leaf.shape)
+        off = 1 if names and names[0] == "groups" else 0
+        logical = shape[off:]
+        if len(logical) < 2:
+            return replicated(par)
+        dims: list = [None] * len(shape)
+        # a true (E, d_in, d_out) expert bank -- MoE archs also carry 2-D
+        # dense wi/wg/wo under 'ffn' (prelude dense layers, shared experts)
+        # which take the generic TP+FSDP layout below
+        moe_expert = (getattr(cfg, "moe", None) is not None
+                      and names[-1] in ("wi", "wg", "wo") and "ffn" in names
+                      and len(logical) == 3)
+        if moe_expert and tp > 1 and logical[0] % tp == 0:
+            dims[off] = par.model_axis
+        elif tp > 1:
+            cands = [i for i in (len(shape) - 1, len(shape) - 2)
+                     if i >= off and shape[i] % tp == 0 and shape[i] >= tp]
+            if cands:
+                dims[max(cands, key=lambda i: shape[i])] = par.model_axis
+        if fsdp > 1 and dims[off] is None and shape[off] % fsdp == 0 \
+                and shape[off] >= fsdp:
+            dims[off] = par.fsdp_axes
+        return par.named(P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(opt_state: Any, p_shard: Any, par: Parallel) -> Any:
+    """AdamW state layout: moments follow the param shardings exactly
+    (which already carry the fs factor, i.e. ZeRO over the data axis);
+    the step counter is replicated."""
+    del opt_state  # structure is {'m': params, 'v': params, 'step': scalar}
+    return {"m": p_shard, "v": p_shard, "step": replicated(par)}
+
+
+# ---------------------------------------------------------------------------
+# batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch: Any, par: Parallel) -> Any:
+    """Leading (batch) dim over all data axes; indivisible leaves replicate."""
+    div = par.batch_size_divisor
+
+    def one(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if not shape or shape[0] % div != 0:
+            return replicated(par)
+        return par.named(P(par.batch_axes, *([None] * (len(shape) - 1))))
+
+    return jax.tree.map(one, batch)
+
+
+def _probe_cache_axes(cfg) -> list:
+    """Locate (batch_dim, time_dim) for every decode-cache leaf exactly.
+
+    Evaluates the cache skeleton at two batch sizes and two capacities; a
+    dim is the batch (time) axis iff it moves with B (T).  Works for any
+    container -- packed QuantizedTensor payloads scale their group dims
+    with T and are found just as reliably as plain arrays.
+    """
+    from repro.models import model as M
+    a = jax.tree.leaves(M.abstract_decode_caches(cfg, 2, 128))
+    b = jax.tree.leaves(M.abstract_decode_caches(cfg, 6, 128))
+    c = jax.tree.leaves(M.abstract_decode_caches(cfg, 2, 256))
+    out = []
+    for la, lb, lc in zip(a, b, c):
+        bdim = next((i for i, (x, y) in enumerate(zip(la.shape, lb.shape))
+                     if x != y), None)
+        tdim = next((i for i, (x, y) in enumerate(zip(la.shape, lc.shape))
+                     if x != y), None)
+        out.append((bdim, tdim))
+    return out
+
+
+def cache_shardings(cache_shapes: Any, cfg, par: Parallel,
+                    global_batch: int) -> Any:
+    """Decode-cache layout for a warm cache of ``global_batch`` sequences.
+
+    Batch axis over the data axes when the global batch divides.  Leaves
+    WITH a time axis (KV caches) shard it over the model axis -- every
+    leaf of one container shares that axis, so the whole cache keeps one
+    layout; time-less SSM state slabs shard their largest head-like dim
+    instead (matching models/ssm.py shard_heads).  When the batch cannot
+    shard (e.g. the 2D weight-stationary serving mode compiles with
+    global_batch=1), the time axis spreads over BOTH data and model axes
+    so the cache stream still scales with the whole mesh.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(cache_shapes)
+    axes = _probe_cache_axes(cfg)
+    assert len(axes) == len(leaves), (
+        f"cache skeleton mismatch: probed {len(axes)} leaves, "
+        f"got {len(leaves)}")
+    div, tp = par.batch_size_divisor, par.tp
+    shard_batch = global_batch % div == 0
+
+    out = []
+    for (bdim, tdim), leaf in zip(axes, leaves):
+        shape = tuple(leaf.shape)
+        dims: list = [None] * len(shape)
+        batch_ok = (shard_batch and bdim is not None
+                    and shape[bdim] % div == 0)
+        if batch_ok:
+            dims[bdim] = par.batch_axes
+        if tp > 1:
+            # dims before the batch axis are scan-stack axes: never sharded
+            start = bdim + 1 if bdim is not None else 0
+            if tdim is not None:
+                # KV caches: every leaf of one cache (payload, scales,
+                # micro-exponents) has the time axis, so sharding it keeps
+                # the whole container on ONE layout -- mixing per-leaf
+                # choices churns the partitioner inside the append scatter
+                if shape[tdim] % tp == 0:
+                    if not batch_ok and div > 1 \
+                            and shape[tdim] % (div * tp) == 0:
+                        dims[tdim] = par.batch_axes + (par.model_axis,)
+                    else:
+                        dims[tdim] = par.model_axis
+            else:
+                # SSM state slabs: largest head-like dim over the model
+                # axis, matching models/ssm.py shard_heads
+                heads = [i for i in range(start, len(shape))
+                         if dims[i] is None and shape[i] % tp == 0
+                         and shape[i] >= tp]
+                if heads:
+                    dims[max(heads, key=lambda i: shape[i])] = par.model_axis
+        out.append(par.named(P(*dims)))
+    return jax.tree_util.tree_unflatten(treedef, out)

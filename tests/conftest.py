@@ -9,6 +9,19 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+
+
+def subprocess_env(**extra):
+    """Env for test subprocesses: absolute src prepended to the INHERITED
+    PYTHONPATH (never clobbered -- pytest may run from outside the repo)."""
+    env = dict(os.environ)
+    inherited = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = _SRC + (os.pathsep + inherited if inherited else "")
+    env.update(extra)
+    return env
+
 
 @pytest.fixture
 def rng():

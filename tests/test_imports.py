@@ -1,0 +1,63 @@
+"""Every module under src/repro must be importable.
+
+A dead import -- like the seed tree's ``repro.dist``, which every sharded
+launcher entry point depended on while the package did not exist -- must
+fail tier-1 loudly instead of hiding behind launcher ``main()``s and
+module-level ``importorskip``s.
+
+Runs in a subprocess: ``repro.launch.dryrun`` mutates ``XLA_FLAGS`` at
+import time (it requests 512 placeholder devices), which must never leak
+into the pytest process where the rest of the suite relies on seeing the
+single real CPU device.
+"""
+import subprocess
+import sys
+
+from conftest import subprocess_env
+
+# every package under src/repro must contribute at least this many modules;
+# a collection collapse (deleted package, import-crashed subtree) trips it
+_MODULE_FLOOR = 55
+
+_WALK = """
+import importlib, pathlib, sys
+
+import jax
+jax.devices()  # lock the backend to the real device(s) BEFORE any module
+               # (repro.launch.dryrun) can request 512 placeholder devices
+
+import repro
+# filesystem walk, not pkgutil: several subpackages are namespace packages
+# (no __init__.py) and pkgutil silently skips subtrees it cannot resolve --
+# exactly the failure mode this test exists to catch
+root = pathlib.Path(list(repro.__path__)[0])
+names = {"repro"}
+for p in sorted(root.rglob("*.py")):
+    parts = ("repro",) + p.relative_to(root).with_suffix("").parts
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    names.add(".".join(parts))
+failed = []
+for name in sorted(names):
+    try:
+        importlib.import_module(name)
+    except Exception as e:  # noqa: BLE001 -- report every broken module
+        failed.append(f"{name}: {type(e).__name__}: {e}")
+print(f"IMPORTED {len(names)}")
+if failed:
+    print("\\n".join(failed))
+    sys.exit(1)
+"""
+
+
+def test_every_repro_module_imports():
+    env = subprocess_env()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", _WALK], capture_output=True,
+                          text=True, timeout=600, env=env)
+    assert proc.returncode == 0, (
+        f"broken modules:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    n = int(proc.stdout.split("IMPORTED")[1].split()[0])
+    assert n >= _MODULE_FLOOR, (
+        f"only {n} modules under repro (floor {_MODULE_FLOOR}) -- "
+        f"a package vanished from the walk")

@@ -1,16 +1,10 @@
 """Distribution correctness on a small host-device mesh (subprocess: these
 tests need 8 CPU devices, while the rest of the suite must see 1)."""
-import json
 import subprocess
 import sys
 import textwrap
 
-import pytest
-
-# the sharding helpers package is absent from the seed tree; every test
-# below shells out to a subprocess whose prelude imports it, so skip the
-# module until repro.dist lands rather than failing each subprocess
-pytest.importorskip("repro.dist")
+from conftest import subprocess_env
 
 _PRELUDE = """
 import os
@@ -30,9 +24,7 @@ from repro.data.pipeline import make_batch_fn
 def _run(body: str) -> str:
     code = _PRELUDE + textwrap.dedent(body)
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=900,
-                          env={**__import__("os").environ,
-                               "PYTHONPATH": "src"})
+                          text=True, timeout=900, env=subprocess_env())
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
     return proc.stdout
 
