@@ -167,7 +167,8 @@ class Roofline:
 
 def analytic_cost(cfg, sc, *, chips: int, tp: int, fs: int, pods: int,
                   n_params: float, grad_accum: int = 1,
-                  serve_2d: bool = False) -> Dict[str, float]:
+                  serve_2d: bool = False,
+                  cache_layout: str = "dense") -> Dict[str, float]:
     """Per-chip, per-step HBM bytes and ICI link bytes.
 
     Model assumptions (bf16 params/activations, f32 grads+moments):
@@ -223,7 +224,8 @@ def analytic_cost(cfg, sc, *, chips: int, tp: int, fs: int, pods: int,
     q_chunk = getattr(cfg, "attn_q_chunk", 512)
     attn_stream_per_seq = (S / q_chunk) * S * kv_width * 2.0   # bf16
 
-    kv_cache, state_rw = _cache_state_bytes(cfg, sc)  # op-registry traffic
+    # op-registry traffic; cache_layout="paged" scores the block-table ops
+    kv_cache, state_rw = _cache_state_bytes(cfg, sc, cache_layout)
     cache = kv_cache + state_rw
 
     out = {}
@@ -283,15 +285,18 @@ def analytic_cost(cfg, sc, *, chips: int, tp: int, fs: int, pods: int,
 # ``traffic(plan)`` supplies the bytes -- the roofline scores exactly the
 # ops the model dispatches, with no independent per-family byte formulas.
 
-def _cache_state_bytes(cfg, sc) -> Tuple[float, float]:
+def _cache_state_bytes(cfg, sc, layout: str = "dense") -> Tuple[float, float]:
     """(KV cache bytes, recurrent state bytes) of the decode-time caches.
 
     One attn/mla decode op streams its whole cache once, so the read side of
     its traffic IS the cache footprint; the state footprint is one read pass
     of every state_update op.  One registry enumeration serves both.
+    ``layout="paged"`` scores the block-table-native ops instead: attention
+    reads are page-granular (whole 128-token pages, including a partially
+    filled tail page), matching what the paged serving engine dispatches.
     """
     from repro.ops import decode_traffic_by_kind
-    by_kind = decode_traffic_by_kind(cfg, sc.global_batch, sc.seq_len)
+    by_kind = decode_traffic_by_kind(cfg, sc.global_batch, sc.seq_len, layout)
     kv = sum(t.state_read for k, t in by_kind.items()
              if k in ("attn_decode", "mla_decode"))
     state = by_kind.get("state_update")

@@ -73,12 +73,20 @@ SYSTEM_FMT = {"gpu": "fp16", "gpu_q": "int8", "gpu_pim": "fp16",
               "pimba": "mx8"}
 
 
-def _op_plan(kind: str, fmt: str, dims: Dict[str, int]):
-    """Plan one SPU op on the jnp backend (timing model scores logical ops)."""
+def _op_plan(kind: str, fmt: str, dims: Dict[str, int],
+             layout: str = "dense"):
+    """Plan one SPU op on the jnp backend (timing model scores logical ops).
+
+    ``layout="paged"`` plans the block-table-native op instead: its traffic
+    is page-granular (whole 128-token pages stream), which is what the
+    bank-conflict model scores for the paged serving pool -- see
+    ``PagedStatePool.bank_traffic``, which feeds
+    :func:`placement_step_latency` bursts derived from those descriptors.
+    """
     from repro import ops as OPS
     quant = OPS.StateQuantConfig(fmt=fmt, rounding="stochastic",
                                  backend="jnp")
-    return OPS.plan(kind, dims, quant, "jnp")
+    return OPS.plan(kind, dims, quant, "jnp", layout=layout)
 
 
 def _op_traffic(plan):
@@ -100,12 +108,13 @@ class StateWorkload:
     dk: int                 # dim_head in the paper's Eq. 2
     dv: int                 # dim_state
     fmt: str = "fp16"       # storage format (fp16 GPU, int8 GPU+Q, mx8 Pimba)
+    layout: str = "dense"   # operand layout (paged = block-table pools)
 
     @property
     def plan(self):
         return _op_plan("state_update", self.fmt,
                         dict(B=self.batch, H=self.n_heads,
-                             dk=self.dk, dv=self.dv))
+                             dk=self.dk, dv=self.dv), self.layout)
 
     @property
     def state_bytes(self) -> float:

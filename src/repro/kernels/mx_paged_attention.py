@@ -1,0 +1,246 @@
+"""Pallas TPU kernels that read/write the paged KV pools *in place*.
+
+The paged serving pool stores every KV stream as a page pool
+``(n_pages, G, 128, KVH, d)`` -- page id ``p`` holds one 128-token,
+MX-tile-aligned chunk, ``G`` is the scan-over-layers stack.  Until these
+kernels existed, every decode step gathered the full context out of the
+pools into a dense cache tree and scattered one token back, tripling the
+decode path's own DRAM traffic (the opposite of Pimba's premise that decode
+is bandwidth-bound, paper §3).
+
+``PAGE_TOKENS == 128`` was chosen to equal the MX tile, so the flash grid
+can walk the block table directly:
+
+``mx_paged_attention_decode``
+    Same score -> streaming softmax -> attend pipeline as
+    :func:`repro.kernels.mx_attention.mx_attention_decode`, but the grid's
+    time dimension walks ``bt[B, npg]``: the block table (and the stacked
+    layer index) are **scalar-prefetched**, so each tile's index map
+    dequantizes one 128-token page straight out of the shared pool -- no
+    dense copy of the context ever exists.  Accumulation order per row is
+    identical to the dense kernel (page ``t`` of row ``b`` holds exactly
+    tile ``t`` of the gathered layout), so outputs are bit-identical.
+
+``mx_paged_kv_append``
+    Writes the new token's already-quantized K/V payload rows into their
+    page slot ``pool[bt[b, len//128], g, len%128]`` in place via
+    ``input_output_aliases`` -- the software analogue of the PIM
+    read-modify-write of a single DRAM column, and the reason the steady
+    state decode loop moves one row, not the whole pool.
+
+Both run ``interpret=True`` on CPU; quantization math is shared with
+:mod:`repro.core.formats`, so results match the jnp reference bitwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import formats as F
+from repro.core.paged import PAGE_TOKENS
+from repro.kernels.mx_attention import NEG_INF, _deq
+
+MXG = F.MX8_GROUP
+
+
+def _paged_attn_kernel(
+    # scalar prefetch
+    bt_ref, grp_ref,
+    # inputs
+    len_ref, q_ref, km_ref, ke_ref, kmi_ref, vm_ref, ve_ref, vmi_ref,
+    # outputs
+    y_ref,
+    # scratch
+    m_scr, l_scr, acc_scr,
+    *, t_blk: int, n_t: int, v_width: int, mla: bool,
+):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qv = q_ref[0, 0].astype(jnp.float32)                        # (G, dk)
+    K = _deq(km_ref[0, 0, :, 0, :], ke_ref[0, 0, :, 0, :],
+             kmi_ref[0, 0, :, 0, :])                            # (t_blk, dk)
+    if mla:
+        V = K[:, :v_width]
+    else:
+        V = _deq(vm_ref[0, 0, :, 0, :], ve_ref[0, 0, :, 0, :],
+                 vmi_ref[0, 0, :, 0, :])
+
+    scores = jax.lax.dot_general(
+        qv, K, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                     # (G, t_blk)
+    pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + t * t_blk
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_scr[...]                                         # (G, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                                 # (G, t_blk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, V, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                     # (G, dv)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(t == n_t - 1)
+    def _finish():
+        y_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("interpret", "v_width", "scale"),
+)
+def mx_paged_attention_decode(
+    q: jnp.ndarray,                 # (B, H, dk) current-token queries
+    k_pool: F.QuantizedTensor,      # pools (P, G, 128, KVH, dk) MX8 payloads
+    v_pool: Optional[F.QuantizedTensor],  # like k_pool; None => MLA
+    bt: jnp.ndarray,                # (B, npg) int32 physical page ids
+    group,                          # () int32 stacked-layer index
+    lengths: jnp.ndarray,           # (B,) int32 valid cache length
+    *, scale: Optional[float] = None, v_width: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused paged decode attention; returns (B, H, dv) f32.
+
+    Bit-identical to ``mx_attention_decode`` over the gathered dense layout
+    of the same pages (same tile order, same flash accumulators).
+    """
+    B, H, dk = q.shape
+    km = k_pool.payload["mantissa"]
+    P, G, TB, KVH, dkc = km.shape
+    assert dk == dkc and H % KVH == 0 and TB == PAGE_TOKENS
+    Gq = H // KVH
+    npg = int(bt.shape[1])
+    mla = v_pool is None
+    dv = v_width if mla else v_pool.payload["mantissa"].shape[-1]
+    assert dv is not None
+
+    scale = scale if scale is not None else dk ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KVH, Gq, dk)
+    lens = lengths.astype(jnp.int32).reshape(B, 1)
+    grp = jnp.asarray(group, jnp.int32).reshape(1)
+
+    ke, kmi = k_pool.payload["exponent"], k_pool.payload["micro"]
+    if mla:
+        vm, ve, vmi = km, ke, kmi        # dummies (kernel reads K for V)
+        v_blk, vgroups = 1, dkc // MXG
+    else:
+        vm = v_pool.payload["mantissa"]
+        ve, vmi = v_pool.payload["exponent"], v_pool.payload["micro"]
+        v_blk, vgroups = TB, dv // MXG
+
+    # index maps see (grid indices..., *scalar-prefetch refs): the page id
+    # comes straight off the prefetched block table, the stacked-layer
+    # coordinate off the prefetched group index
+    kpage = lambda b, h, t, bt_ref, g_ref: (bt_ref[b, t], g_ref[0], 0, h, 0)
+    vpage = ((lambda b, h, t, bt_ref, g_ref: (0, 0, 0, h, 0)) if mla
+             else kpage)
+
+    kernel = functools.partial(_paged_attn_kernel, t_blk=TB, n_t=npg,
+                               v_width=dv, mla=mla)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, t, *_: (b, 0)),            # len
+            pl.BlockSpec((1, 1, Gq, dk), lambda b, h, t, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, TB, 1, dk), kpage),                      # km
+            pl.BlockSpec((1, 1, TB, 1, dk // MXG), kpage),               # ke
+            pl.BlockSpec((1, 1, TB, 1, dk // MXG), kpage),               # kmi
+            pl.BlockSpec((1, 1, v_blk, 1, vgroups * MXG), vpage),        # vm
+            pl.BlockSpec((1, 1, v_blk, 1, vgroups), vpage),              # ve
+            pl.BlockSpec((1, 1, v_blk, 1, vgroups), vpage),              # vmi
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gq, dv), lambda b, h, t, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Gq, 1), jnp.float32),
+            pltpu.VMEM((Gq, 1), jnp.float32),
+            pltpu.VMEM((Gq, dv), jnp.float32),
+        ],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, Gq, dv), jnp.float32),
+        interpret=interpret,
+    )(bt, grp, lens, qg, km, ke, kmi, vm, ve, vmi)
+    return y.reshape(B, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# in-place paged token append
+# ---------------------------------------------------------------------------
+
+def _append_kernel(bt_ref, pos_ref, grp_ref, *refs):
+    """Write each row's new-token block into its page slot (one column)."""
+    n = len(refs) // 3
+    val_refs, pool_refs, out_refs = refs[:n], refs[n:2 * n], refs[2 * n:]
+    del pool_refs  # aliased storage; present only to seed the outputs
+    for v_ref, o_ref in zip(val_refs, out_refs):
+        o_ref[0, 0, 0] = v_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mx_paged_kv_append(
+    pools: Sequence[jnp.ndarray],   # each (P, G, 128, KVH, w)
+    rows: Sequence[jnp.ndarray],    # each (B, KVH, w) quantized payload rows
+    bt: jnp.ndarray,                # (B, npg) int32
+    group,                          # () int32
+    lengths: jnp.ndarray,           # (B,) append position per row
+    *, interpret: bool = True,
+) -> Tuple[jnp.ndarray, ...]:
+    """Scatter one token's payload rows into their page slots in place.
+
+    The pools are aliased input->output (``input_output_aliases``), so the
+    unwritten 99.9% of every pool is never touched -- the paged analogue of
+    the dense path's full-cache scatter, at one-slot write traffic.
+    """
+    pools = tuple(pools)
+    rows = tuple(rows)
+    assert len(pools) == len(rows) and pools
+    B = bt.shape[0]
+    P, G, TB, KVH, _ = pools[0].shape
+    assert TB == PAGE_TOKENS
+    pos = lengths.astype(jnp.int32)
+    grp = jnp.asarray(group, jnp.int32).reshape(1)
+
+    def slot(b, bt_ref, pos_ref, g_ref):
+        return (bt_ref[b, pos_ref[b] // TB], g_ref[0], pos_ref[b] % TB, 0, 0)
+
+    n = len(pools)
+    in_specs = (
+        [pl.BlockSpec((1, KVH, r.shape[-1]), lambda b, *_: (b, 0, 0))
+         for r in rows]
+        + [pl.BlockSpec((1, 1, 1, KVH, p.shape[-1]), slot) for p in pools])
+    out_specs = [pl.BlockSpec((1, 1, 1, KVH, p.shape[-1]), slot)
+                 for p in pools]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    out = pl.pallas_call(
+        _append_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools],
+        # alias pool i (input index: 3 scalars + n value rows + i) to out i
+        input_output_aliases={3 + n + i: i for i in range(n)},
+        interpret=interpret,
+    )(bt, pos, grp, *rows, *pools)
+    return tuple(out)

@@ -32,12 +32,14 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "pallas", "jnp"],
                     help="SPU op backend; 'auto' asks the op registry for "
-                         "the preferred backend capable of --state-format. "
-                         "A concrete choice errors if any SPU compute op "
-                         "the model runs (state_update / attn_decode / "
-                         "mla_decode) lacks that (op, format, backend) "
-                         "registration; kv_append is jnp-only by design "
-                         "and always negotiates")
+                         "the preferred backend capable of --state-format "
+                         "in the served layout (dense, or paged under "
+                         "--paged). A concrete choice errors if any SPU "
+                         "compute op the model runs (state_update / "
+                         "attn_decode / mla_decode) lacks that (op, format, "
+                         "backend, layout) registration; kv_append always "
+                         "negotiates (dense kv_append is jnp-only; the "
+                         "paged one has an in-place pallas impl for mx8)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 disables)")
@@ -80,14 +82,18 @@ def main(argv=None):
     # --backend fails up front; kv_append (a scatter, jnp-only by design)
     # always negotiates, as does everything under --backend auto
     requested = None if args.backend == "auto" else args.backend
+    # --paged serves through the block-table-native ops, so the capability
+    # check runs against the layout actually dispatched
+    layout = "paged" if args.paged else "dense"
     compute_kinds = sorted({e.kind for e in OPS.decode_op_plans(cfg, 1, 128)}
                            - {"kv_append"})
     try:
         resolved = [OPS.resolve_backend(kind, args.state_format, requested,
+                                        layout=layout,
                                         strict=requested is not None)
                     for kind in compute_kinds]
         backend = resolved[0] if resolved else OPS.resolve_backend(
-            "state_update", args.state_format, requested)
+            "state_update", args.state_format, requested, layout=layout)
     except ValueError as e:
         raise SystemExit(f"--backend {args.backend}: {e}")
     cfg = cfg.with_(state_quant=OPS.StateQuantConfig(

@@ -514,3 +514,98 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     x = L.apply_norm(params["final_norm"], x[:, 0], cfg.norm_kind, cfg.norm_eps)
     logits = x @ _lm_head(params, cfg)
     return logits, new_caches
+
+
+def paged_decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                      caches: Any, lengths: jnp.ndarray, seed=0,
+                      mesh_axes=None) -> Tuple[jnp.ndarray, Any]:
+    """One decode step over block-table-native paged cache views.
+
+    ``caches`` mirrors :func:`init_decode_caches`' structure, but KV caches
+    are :class:`~repro.core.paged.PagedKVCache` views and recurrent ``"S"``
+    leaves are :class:`~repro.core.paged.PagedState` views -- both address
+    the serving pool's shared page/slab pools and carry a ``group`` index
+    into the scan-over-layers stack; remaining slab leaves (conv tails,
+    sLSTM carries) are dense gathered rows in the stacked ``(G, B, ...)``
+    layout.  Because the pools cannot be sliced along the group axis without
+    copying them, the paged containers ride the scan *carry* (each group
+    iteration re-binds ``group`` and updates the same pools in place) while
+    the dense leaves scan as xs/ys exactly like :func:`decode_step`.
+
+    Element math, seeds and op dispatch are shared with :func:`decode_step`
+    (the container type selects the paged ops), so logits are bit-identical
+    to running the dense path over gathered pages.
+    """
+    from repro.core import paged as PG
+    assert not cfg.encoder_only, f"{cfg.name} is encoder-only: no decode step"
+    x = params["embed"][tokens][:, None]                       # (B,1,d)
+    positions = lengths
+    if cfg.pos_emb == "learned":
+        x = x + params["pos"][positions][:, None]
+    shared = params.get("shared")
+
+    if cfg.prelude:
+        prelude_caches, caches = caches["prelude"], caches["groups"]
+        new_prelude = []
+        for i, kind in enumerate(cfg.prelude):
+            c = PG.with_group(prelude_caches[i], 0, lengths)
+            x, c = _element_decode(params["prelude"][i], x, c,
+                                   cfg, kind, positions,
+                                   jnp.uint32(seed) + jnp.uint32(7919 * (i + 1)))
+            new_prelude.append(c)
+
+    n_elems = len(cfg.pattern) + (1 if shared is not None else 0)
+    carried, scanned = [], []
+    for pos in range(n_elems):
+        ca, sc = PG.split_paged(caches[pos])
+        carried.append(ca)
+        scanned.append(sc)
+    carried, scanned = tuple(carried), tuple(scanned)
+
+    def group_body(carry, ginp):
+        x, kv = carry
+        gparams, gstates, gidx = ginp
+        seed_g = jnp.uint32(seed) + gidx.astype(jnp.uint32) * jnp.uint32(_SEED_STRIDE)
+        new_kv, new_states = [], []
+        for pos, kind in enumerate(cfg.pattern):
+            c = PG.merge_paged(PG.with_group(kv[pos], gidx, lengths),
+                               gstates[pos])
+            x, c = _element_decode(gparams[pos], x, c, cfg, kind,
+                                   positions, seed_g + jnp.uint32(pos + 1))
+            ca, sc = PG.split_paged(c)
+            new_kv.append(ca)
+            new_states.append(sc)
+        if shared is not None:
+            h = L.apply_norm(shared["norm"], x, cfg.norm_kind, cfg.norm_eps)
+            y, c = ATT.attention_decode(
+                shared["attn"], h, PG.with_group(kv[-1], gidx, lengths), cfg,
+                positions[:, None], seed_g + jnp.uint32(99))
+            x = x + y
+            h = L.apply_norm(shared["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + L.apply_ffn(shared["ffn"], h, cfg.ffn_kind)
+            new_kv.append(c)
+            new_states.append(None)
+        return (x, tuple(new_kv)), tuple(new_states)
+
+    if cfg.scan_layers:
+        (x, carried), new_scanned = jax.lax.scan(
+            group_body, (x, carried),
+            (params["groups"], scanned, jnp.arange(cfg.n_groups)))
+    else:
+        stacked = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            gs = jax.tree.map(lambda a: a[g], scanned,
+                              is_leaf=lambda v: isinstance(v, jnp.ndarray))
+            (x, carried), sc = group_body((x, carried),
+                                          (gp, gs, jnp.asarray(g)))
+            stacked.append(sc)
+        new_scanned = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+
+    new_caches = tuple(PG.merge_paged(carried[pos], new_scanned[pos])
+                       for pos in range(n_elems))
+    if cfg.prelude:
+        new_caches = {"prelude": tuple(new_prelude), "groups": new_caches}
+    x = L.apply_norm(params["final_norm"], x[:, 0], cfg.norm_kind, cfg.norm_eps)
+    logits = x @ _lm_head(params, cfg)
+    return logits, new_caches

@@ -22,8 +22,9 @@ Typical call sites::
 """
 # NOTE: import order matters -- base and registry first (no repro deps
 # beyond core.formats), then the op implementations (which register
-# themselves on import), then the model-level traffic bridge.
-from repro.ops.base import (OpPlan, SpuDeprecationWarning, SpuOp,
+# themselves on import; dense before paged, the paged ops delegate to the
+# dense kernels on gathered rows), then the model-level traffic bridge.
+from repro.ops.base import (LAYOUTS, OpPlan, SpuDeprecationWarning, SpuOp,
                             StateQuantConfig, TrafficBytes, fmt_bits,
                             fmt_of_state)
 from repro.ops.registry import (BACKEND_PREFERENCE, OP_KINDS, backends_for,
@@ -36,11 +37,13 @@ from repro.ops.state_update import (StateLike, init_state,
 from repro.ops.attention import (attention_decode_step, attn_decode,
                                  attn_kind_of, kv_append,
                                  plan_attn_decode_dims)
+import repro.ops.paged_ops  # noqa: F401  (registers the paged-layout ops)
+from repro.core.paged import PagedKVCache, PagedState
 from repro.ops.model_traffic import (OpTrafficEntry, decode_op_plans,
                                      decode_traffic_by_kind)
 
 __all__ = [
-    "OpPlan", "SpuDeprecationWarning", "SpuOp", "StateQuantConfig",
+    "LAYOUTS", "OpPlan", "SpuDeprecationWarning", "SpuOp", "StateQuantConfig",
     "TrafficBytes", "fmt_bits", "fmt_of_state",
     "BACKEND_PREFERENCE", "OP_KINDS", "backends_for", "execute", "get_op",
     "plan", "register", "registered", "resolve_backend", "supports",
@@ -49,5 +52,6 @@ __all__ = [
     "state_nbytes", "state_update_float", "state_update_step",
     "attention_decode_step", "attn_decode", "attn_kind_of", "kv_append",
     "plan_attn_decode_dims",
+    "PagedKVCache", "PagedState",
     "OpTrafficEntry", "decode_op_plans", "decode_traffic_by_kind",
 ]

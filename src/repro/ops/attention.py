@@ -166,11 +166,30 @@ class MlaDecodeJnp(_AttnDecodeJnp):
 # call-site entry points
 # ---------------------------------------------------------------------------
 
-def attn_kind_of(cache: AC.KVCache) -> str:
+def attn_kind_of(cache) -> str:
     return "mla_decode" if cache.v_width is not None else "attn_decode"
 
 
-def _cache_dims(cache: AC.KVCache, n: int = 1) -> Dict[str, int]:
+def _layout_of(cache) -> str:
+    """The container type selects the op layout: a PagedKVCache dispatches
+    to the block-table-native ops, a dense KVCache to the dense ops."""
+    from repro.core.paged import PagedKVCache
+    return "paged" if isinstance(cache, PagedKVCache) else "dense"
+
+
+def _cache_quant(cache, cfg: StateQuantConfig) -> StateQuantConfig:
+    from repro.core.paged import PagedKVCache
+    fmt = (cache.fmt if isinstance(cache, PagedKVCache)
+           else fmt_of_state(cache.k))
+    return StateQuantConfig(fmt=fmt, rounding=cfg.rounding,
+                            backend=cfg.backend)
+
+
+def _cache_dims(cache, n: int = 1) -> Dict[str, int]:
+    from repro.core.paged import PagedKVCache
+    if isinstance(cache, PagedKVCache):
+        return dict(B=cache.batch, T=cache.max_len, KVH=cache.kv_heads,
+                    dk=cache.dk, dv=0 if cache.v is None else cache.dv, n=n)
     B, T, KVH, dk = cache.k.shape
     dv = 0 if cache.v is None else cache.v.shape[-1]
     return dict(B=B, T=T, KVH=KVH, dk=dk, dv=dv, n=n)
@@ -178,49 +197,50 @@ def _cache_dims(cache: AC.KVCache, n: int = 1) -> Dict[str, int]:
 
 def plan_attn_decode_dims(kind: str, dims: Dict[str, int],
                           cfg: StateQuantConfig, *, scale=None,
-                          v_width=None, strict: bool = False) -> OpPlan:
+                          v_width=None, layout: str = "dense",
+                          strict: bool = False) -> OpPlan:
     """Plan a decode-attention invocation from explicit dims (cost models)."""
     dims = dict(dims)
     dims.setdefault("H", dims["KVH"])
-    return registry.plan(kind, dims, cfg, cfg.backend, strict=strict,
-                         scale=scale, v_width=v_width)
+    return registry.plan(kind, dims, cfg, cfg.backend, layout=layout,
+                         strict=strict, scale=scale, v_width=v_width)
 
 
-def kv_append(cache: AC.KVCache, k_new: jnp.ndarray,
+def kv_append(cache, k_new: jnp.ndarray,
               v_new: Optional[jnp.ndarray], cfg: StateQuantConfig,
-              seed=0) -> AC.KVCache:
+              seed=0):
     """Append one (or n) token(s): k_new (B, n, KVH, dk)."""
-    quant = StateQuantConfig(fmt=fmt_of_state(cache.k), rounding=cfg.rounding,
-                             backend=cfg.backend)
+    quant = _cache_quant(cache, cfg)
     p = registry.plan("kv_append", _cache_dims(cache, n=k_new.shape[1]), quant,
-                      cfg.backend)
+                      cfg.backend, layout=_layout_of(cache))
     new_cache, _ = registry.execute(cache, {"k": k_new, "v": v_new,
                                             "seed": seed}, p)
     return new_cache
 
 
-def attn_decode(cache: AC.KVCache, q: jnp.ndarray, cfg: StateQuantConfig,
+def attn_decode(cache, q: jnp.ndarray, cfg: StateQuantConfig,
                 scale: Optional[float] = None,
                 t_block: int = 128) -> jnp.ndarray:
     """Decode attention of current-token queries q (B,H,dk) vs the cache."""
-    quant = StateQuantConfig(fmt=fmt_of_state(cache.k), rounding=cfg.rounding,
-                             backend=cfg.backend)
+    quant = _cache_quant(cache, cfg)
     dims = _cache_dims(cache)
     dims["H"] = q.shape[1]
     p = registry.plan(attn_kind_of(cache), dims, quant, cfg.backend,
+                      layout=_layout_of(cache),
                       scale=scale, v_width=cache.v_width, t_block=t_block)
     _, out = registry.execute(cache, {"q": q}, p)
     return out
 
 
-def attention_decode_step(cache: AC.KVCache, k_new: jnp.ndarray,
+def attention_decode_step(cache, k_new: jnp.ndarray,
                           v_new: Optional[jnp.ndarray], q: jnp.ndarray,
                           cfg: StateQuantConfig, *,
                           scale: Optional[float] = None, seed=0,
                           ) -> Tuple[jnp.ndarray, AC.KVCache]:
     """One decode step: append the token's K/V, then attend.
 
-    The single entry point for GQA and MLA, paged and contiguous caches.
+    The single entry point for GQA and MLA; the cache container selects the
+    layout (dense ``KVCache`` vs block-table ``PagedKVCache``).
     """
     cache = kv_append(cache, k_new, v_new, cfg, seed=seed)
     out = attn_decode(cache, q, cfg, scale=scale)

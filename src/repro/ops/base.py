@@ -113,6 +113,13 @@ class TrafficBytes:
                             self.output_write + o.output_write)
 
 
+#: operand layouts an op implementation can execute against.  ``dense`` is
+#: the contiguous per-step cache tree; ``paged`` is the block-table-native
+#: pool layout (``repro.core.paged``) where attention walks ``bt[B, npg]``
+#: page ids in place and state updates touch slab rows in place.
+LAYOUTS = ("dense", "paged")
+
+
 @dataclasses.dataclass(frozen=True)
 class OpPlan:
     """Immutable, hashable description of one op invocation.
@@ -127,6 +134,7 @@ class OpPlan:
     rounding: str
     dims: Tuple[Tuple[str, int], ...]
     options: Tuple[Tuple[str, Any], ...] = ()
+    layout: str = "dense"
 
     def dim(self, name: str) -> int:
         for k, v in self.dims:
@@ -147,16 +155,19 @@ class OpPlan:
 
 
 class SpuOp:
-    """One (kind, backend) operator implementation.
+    """One (kind, backend, layout) operator implementation.
 
-    Subclasses set ``kind``, ``backend`` and ``formats`` (the storage formats
-    this implementation can execute -- the capability the registry negotiates
-    over) and implement ``execute`` and ``traffic``.
+    Subclasses set ``kind``, ``backend``, ``formats`` (the storage formats
+    this implementation can execute) and ``layout`` (the operand layout it
+    reads -- dense cache trees or block-table paged pools); the registry
+    negotiates capability over all four axes.  Implement ``execute`` and
+    ``traffic``.
     """
 
     kind: str = ""
     backend: str = ""
     formats: Tuple[str, ...] = ()
+    layout: str = "dense"
 
     def plan(self, dims: Mapping[str, int], quant: StateQuantConfig,
              **options) -> OpPlan:
@@ -167,7 +178,8 @@ class SpuOp:
         return OpPlan(kind=self.kind, backend=self.backend, fmt=quant.fmt,
                       rounding=quant.rounding,
                       dims=tuple(sorted(dims.items())),
-                      options=tuple(sorted(options.items())))
+                      options=tuple(sorted(options.items())),
+                      layout=self.layout)
 
     def execute(self, state: Any, inputs: Dict[str, Any],
                 plan: OpPlan) -> Tuple[Any, Any]:

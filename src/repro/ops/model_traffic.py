@@ -54,12 +54,16 @@ def _state_dims(cfg, kind: str):
     return SSM._gla_dims(cfg)
 
 
-def decode_op_plans(cfg, batch: int, seq_len: int) -> List[OpTrafficEntry]:
+def decode_op_plans(cfg, batch: int, seq_len: int,
+                    layout: str = "dense") -> List[OpTrafficEntry]:
     """Every SPU op one decode step runs for ``cfg``, with layer counts.
 
     ``seq_len`` is the cached context length the attention ops stream.
     Backend resolution follows ``cfg.state_quant`` (same negotiation as the
     executing call sites), so the accounted op is the dispatched op.
+    ``layout="paged"`` enumerates the block-table-native ops instead: their
+    traffic is page-granular (whole 128-token pages stream, appends write
+    one slot), which is what the paged engine and the PIM bank model score.
     """
     quant = cfg.state_quant
     entries: List[OpTrafficEntry] = []
@@ -79,7 +83,8 @@ def decode_op_plans(cfg, batch: int, seq_len: int) -> List[OpTrafficEntry]:
     for (H, dk, dv), n in sorted(state_counts.items()):
         entries.append(OpTrafficEntry(
             "state_update",
-            plan_state_update_dims(batch, H, dk, dv, quant), n))
+            plan_state_update_dims(batch, H, dk, dv, quant, layout=layout),
+            n))
 
     # -- attention decode + the token append that feeds it -------------
     from repro.ops.attention import plan_attn_decode_dims
@@ -89,11 +94,12 @@ def decode_op_plans(cfg, batch: int, seq_len: int) -> List[OpTrafficEntry]:
                     dk=cfg.head_dim, dv=cfg.head_dim, n=1,
                     H=cfg.n_heads)
         entries.append(OpTrafficEntry(
-            "attn_decode", plan_attn_decode_dims("attn_decode", dims, quant),
+            "attn_decode", plan_attn_decode_dims("attn_decode", dims, quant,
+                                                 layout=layout),
             n_attn))
         entries.append(OpTrafficEntry(
             "kv_append", registry.plan("kv_append", dims, quant,
-                                       quant.backend), n_attn))
+                                       quant.backend, layout=layout), n_attn))
     n_mla = layer_count("mla")
     if n_mla and cfg.mla is not None:
         dims = dict(B=batch, T=seq_len, KVH=1, dk=cfg.mla.cache_width,
@@ -101,17 +107,18 @@ def decode_op_plans(cfg, batch: int, seq_len: int) -> List[OpTrafficEntry]:
         entries.append(OpTrafficEntry(
             "mla_decode",
             plan_attn_decode_dims("mla_decode", dims, quant,
-                                  v_width=cfg.mla.kv_lora), n_mla))
+                                  v_width=cfg.mla.kv_lora, layout=layout),
+            n_mla))
         entries.append(OpTrafficEntry(
             "kv_append", registry.plan("kv_append", dims, quant,
-                                       quant.backend), n_mla))
+                                       quant.backend, layout=layout), n_mla))
     return entries
 
 
-def decode_traffic_by_kind(cfg, batch: int, seq_len: int
-                           ) -> Dict[str, TrafficBytes]:
+def decode_traffic_by_kind(cfg, batch: int, seq_len: int,
+                           layout: str = "dense") -> Dict[str, TrafficBytes]:
     """Per-op-kind traffic of one decode step (sums entries of a kind)."""
     out: Dict[str, TrafficBytes] = {}
-    for e in decode_op_plans(cfg, batch, seq_len):
+    for e in decode_op_plans(cfg, batch, seq_len, layout):
         out[e.kind] = out.get(e.kind, TrafficBytes()) + e.traffic
     return out

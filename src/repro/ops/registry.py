@@ -1,10 +1,10 @@
-"""The SPU operator registry: (op kind x backend x format) dispatch.
+"""The SPU operator registry: (op kind x backend x format x layout) dispatch.
 
 Every decode-time memory-bound op registers an :class:`~repro.ops.base.SpuOp`
 implementation here.  Call sites never pick a backend with ad-hoc
 heuristics; they ask :func:`resolve_backend` for a capable one (preferring
 the fused Pallas kernels when registered for the format) or demand an exact
-triple with ``strict=True``, which raises a clear error listing what *is*
+quadruple with ``strict=True``, which raises a clear error listing what *is*
 registered.
 
 Op kinds
@@ -15,60 +15,75 @@ Op kinds
 ``mla_decode``    -- one-token MLA attention over the compressed latent cache
 ``kv_append``     -- quantize + scatter new K/V (or latent) rows into a cache
 
-Extending: subclass ``SpuOp``, set ``kind``/``backend``/``formats``,
-implement ``execute`` and ``traffic``, and call :func:`register` at import
-time (see ``repro/ops/state_update.py`` for the canonical example).
+Layouts
+-------
+``dense``  -- contiguous per-step cache trees (fixed-slot serving, tests)
+``paged``  -- block-table-native page/slab pools (``repro.core.paged``):
+              attention streams 128-token pages in place via scalar-prefetched
+              page ids, ``kv_append`` writes one page slot in place, and
+              ``state_update`` touches exactly the owned slab rows.
+
+Extending: subclass ``SpuOp``, set ``kind``/``backend``/``formats`` (and
+``layout`` for paged ops), implement ``execute`` and ``traffic``, and call
+:func:`register` at import time (see ``repro/ops/state_update.py`` for the
+canonical dense example and ``repro/ops/paged_ops.py`` for paged).
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from repro.ops.base import OpPlan, SpuOp, StateQuantConfig, TrafficBytes
+from repro.ops.base import (LAYOUTS, OpPlan, SpuOp, StateQuantConfig,
+                            TrafficBytes)
 
 OP_KINDS = ("state_update", "attn_decode", "mla_decode", "kv_append")
 
 #: backend preference for capability negotiation ("auto" requests)
 BACKEND_PREFERENCE = ("pallas", "jnp")
 
-_REGISTRY: Dict[Tuple[str, str, str], SpuOp] = {}
+_REGISTRY: Dict[Tuple[str, str, str, str], SpuOp] = {}
 
 
 def register(op) -> SpuOp:
     """Register one implementation under every format it supports.
 
     Accepts an instance or an SpuOp subclass (usable as a class decorator).
-    A triple already owned by a *different* implementation is an error --
+    A quadruple already owned by a *different* implementation is an error --
     silent replacement would switch dispatch and traffic accounting with no
     trace; re-registering the same class (module reload) is idempotent.
     """
     inst = op() if isinstance(op, type) else op
     if inst.kind not in OP_KINDS:
         raise ValueError(f"unknown op kind {inst.kind!r}; kinds: {OP_KINDS}")
+    if inst.layout not in LAYOUTS:
+        raise ValueError(
+            f"unknown op layout {inst.layout!r}; layouts: {LAYOUTS}")
     for fmt in inst.formats:
-        key = (inst.kind, inst.backend, fmt)
+        key = (inst.kind, inst.backend, fmt, inst.layout)
         cur = _REGISTRY.get(key)
         if cur is not None and (type(cur).__module__, type(cur).__qualname__) \
                 != (type(inst).__module__, type(inst).__qualname__):
             raise ValueError(
-                f"op triple {key} already registered by "
+                f"op quadruple {key} already registered by "
                 f"{type(cur).__qualname__}; refusing to overwrite with "
                 f"{type(inst).__qualname__}")
         _REGISTRY[key] = inst
     return op
 
 
-def registered() -> List[Tuple[str, str, str]]:
-    """Sorted (kind, backend, fmt) triples currently registered."""
+def registered() -> List[Tuple[str, str, str, str]]:
+    """Sorted (kind, backend, fmt, layout) quadruples currently registered."""
     return sorted(_REGISTRY)
 
 
-def supports(kind: str, fmt: str, backend: str) -> bool:
-    return (kind, backend, fmt) in _REGISTRY
+def supports(kind: str, fmt: str, backend: str,
+             layout: str = "dense") -> bool:
+    return (kind, backend, fmt, layout) in _REGISTRY
 
 
-def backends_for(kind: str, fmt: str) -> List[str]:
-    """Capable backends for (kind, fmt), in preference order."""
-    found = {b for (k, b, f) in _REGISTRY if k == kind and f == fmt}
+def backends_for(kind: str, fmt: str, layout: str = "dense") -> List[str]:
+    """Capable backends for (kind, fmt, layout), in preference order."""
+    found = {b for (k, b, f, lo) in _REGISTRY
+             if k == kind and f == fmt and lo == layout}
     ordered = [b for b in BACKEND_PREFERENCE if b in found]
     return ordered + sorted(found - set(ordered))
 
@@ -77,12 +92,12 @@ def _describe(kind: Optional[str] = None) -> str:
     rows = [t for t in registered() if kind is None or t[0] == kind]
     if not rows:
         return "(registry is empty)"
-    return ", ".join(f"{k}[{b}:{f}]" for k, b, f in rows)
+    return ", ".join(f"{k}[{b}:{f}:{lo}]" for k, b, f, lo in rows)
 
 
 def resolve_backend(kind: str, fmt: str, requested: Optional[str] = None,
-                    *, strict: bool = False) -> str:
-    """Capability negotiation for one (kind, fmt).
+                    *, layout: str = "dense", strict: bool = False) -> str:
+    """Capability negotiation for one (kind, fmt, layout).
 
     ``requested=None`` (or ``"auto"``) picks the preferred capable backend.
     A concrete ``requested`` is honored when registered; otherwise ``strict``
@@ -90,11 +105,11 @@ def resolve_backend(kind: str, fmt: str, requested: Optional[str] = None,
     to a capable backend (the historical behavior of the inline
     ``"pallas" if fmt == "mx8" else "jnp"`` heuristic, which this replaces).
     """
-    capable = backends_for(kind, fmt)
+    capable = backends_for(kind, fmt, layout)
     if not capable:
         raise ValueError(
-            f"no backend registered for op {kind!r} with format {fmt!r}; "
-            f"registered ops: {_describe()}")
+            f"no backend registered for op {kind!r} with format {fmt!r} "
+            f"layout {layout!r}; registered ops: {_describe()}")
     if requested in (None, "auto"):
         return capable[0]
     if requested in capable:
@@ -102,33 +117,36 @@ def resolve_backend(kind: str, fmt: str, requested: Optional[str] = None,
     if strict:
         raise ValueError(
             f"backend {requested!r} is not registered for op {kind!r} with "
-            f"format {fmt!r} (capable: {capable}); registered ops: "
-            f"{_describe(kind)}")
+            f"format {fmt!r} layout {layout!r} (capable: {capable}); "
+            f"registered ops: {_describe(kind)}")
     return capable[0]
 
 
-def get_op(kind: str, backend: str, fmt: str) -> SpuOp:
+def get_op(kind: str, backend: str, fmt: str,
+           layout: str = "dense") -> SpuOp:
     try:
-        return _REGISTRY[(kind, backend, fmt)]
+        return _REGISTRY[(kind, backend, fmt, layout)]
     except KeyError:
         raise KeyError(
-            f"op {kind!r} backend {backend!r} format {fmt!r} is not "
-            f"registered; registered ops: {_describe(kind)}") from None
+            f"op {kind!r} backend {backend!r} format {fmt!r} layout "
+            f"{layout!r} is not registered; registered ops: "
+            f"{_describe(kind)}") from None
 
 
 def plan(kind: str, dims, quant: StateQuantConfig,
-         backend: Optional[str] = None, *, strict: bool = False,
-         **options) -> OpPlan:
-    """Resolve a backend for (kind, quant.fmt) and build the op's plan."""
-    b = resolve_backend(kind, quant.fmt, backend, strict=strict)
-    return get_op(kind, b, quant.fmt).plan(dims, quant, **options)
+         backend: Optional[str] = None, *, layout: str = "dense",
+         strict: bool = False, **options) -> OpPlan:
+    """Resolve a backend for (kind, quant.fmt, layout) and build the plan."""
+    b = resolve_backend(kind, quant.fmt, backend, layout=layout,
+                        strict=strict)
+    return get_op(kind, b, quant.fmt, layout).plan(dims, quant, **options)
 
 
 def execute(state, inputs, p: OpPlan):
     """Dispatch one planned invocation to its registered implementation."""
-    return get_op(p.kind, p.backend, p.fmt).execute(state, inputs, p)
+    return get_op(p.kind, p.backend, p.fmt, p.layout).execute(state, inputs, p)
 
 
 def traffic(p: OpPlan) -> TrafficBytes:
     """The registered op's own traffic descriptor for ``p``."""
-    return get_op(p.kind, p.backend, p.fmt).traffic(p)
+    return get_op(p.kind, p.backend, p.fmt, p.layout).traffic(p)

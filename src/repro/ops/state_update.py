@@ -133,15 +133,23 @@ def state_update_float(S: jnp.ndarray, d, k, v, q,
 # ---------------------------------------------------------------------------
 
 def plan_state_update_dims(B: int, H: int, dk: int, dv: int,
-                           cfg: StateQuantConfig, *, strict: bool = False,
-                           ) -> OpPlan:
+                           cfg: StateQuantConfig, *, layout: str = "dense",
+                           strict: bool = False) -> OpPlan:
     """Plan one Eq. 2 invocation from explicit dims (cost-model entry)."""
     return registry.plan("state_update", dict(B=B, H=H, dk=dk, dv=dv),
-                         cfg, cfg.backend, strict=strict)
+                         cfg, cfg.backend, layout=layout, strict=strict)
 
 
-def plan_state_update(state: StateLike, cfg: StateQuantConfig) -> OpPlan:
-    """Plan from a live state container; format comes from the container."""
+def plan_state_update(state, cfg: StateQuantConfig) -> OpPlan:
+    """Plan from a live state container; format and layout come from the
+    container (a ``PagedState`` slab view dispatches the paged op, which
+    updates the owned slab rows in place)."""
+    from repro.core.paged import PagedState
+    if isinstance(state, PagedState):
+        B, H, dv, dk = state.shape
+        quant = StateQuantConfig(fmt=state.fmt, rounding=cfg.rounding,
+                                 backend=cfg.backend)
+        return plan_state_update_dims(B, H, dk, dv, quant, layout="paged")
     B, H, dv, dk = state.shape
     quant = StateQuantConfig(fmt=fmt_of_state(state), rounding=cfg.rounding,
                              backend=cfg.backend)

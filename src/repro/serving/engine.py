@@ -31,6 +31,7 @@ import numpy as np
 from repro import ops as OPS
 from repro.core import attention_cache as AC
 from repro.core import formats as F
+from repro.core.paged import PAGE_TOKENS, pages_for
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.sampler import SamplingConfig, sample
@@ -66,37 +67,59 @@ class _OpTrafficMeter:
     Bytes come from the registered ops' own ``traffic(plan)`` descriptors
     (``repro.ops.decode_traffic_by_kind``) at each active row's real context
     length, so the serving stats attribute bandwidth between attention and
-    state-update ops with the same numbers the cost models use.  Per-row
-    traffic is affine in the context length, so the descriptors are probed
-    once at two lengths and each step costs O(kinds), not O(rows) registry
-    walks -- no per-slot Python work in the decode loop.
+    state-update ops with the same numbers the cost models use.
+
+    ``layout="dense"`` traffic is affine in the context length; the
+    ``layout="paged"`` ops are affine in the *page count* (whole 128-token
+    pages stream, appends write one slot).  Either way the descriptors are
+    probed once at two operating points and each step costs O(kinds), not
+    O(rows) registry walks -- no per-slot Python work in the decode loop.
     """
 
-    def __init__(self, cfg: ModelConfig):
+    def __init__(self, cfg: ModelConfig, layout: str = "dense"):
         self.cfg = cfg
+        self.layout = layout
         self.by_kind: Dict[str, float] = {}
-        self._affine = None            # kind -> (bytes at T=1, bytes per +1 T)
+        self._affine = None   # kind -> (bytes at 1 unit, bytes per +1 unit)
 
     def _coeffs(self) -> Dict[str, tuple]:
         if self._affine is None:
-            t1 = OPS.decode_traffic_by_kind(self.cfg, 1, 1)
-            t2 = OPS.decode_traffic_by_kind(self.cfg, 1, 2)
+            if self.layout == "paged":
+                u1, u2 = PAGE_TOKENS, 2 * PAGE_TOKENS   # 1 page, 2 pages
+            else:
+                u1, u2 = 1, 2                            # 1 token, 2 tokens
+            t1 = OPS.decode_traffic_by_kind(self.cfg, 1, u1, self.layout)
+            t2 = OPS.decode_traffic_by_kind(self.cfg, 1, u2, self.layout)
             self._affine = {k: (t1[k].total, t2[k].total - t1[k].total)
                             for k in t1}
         return self._affine
 
+    def _units(self, length: int) -> int:
+        """Traffic units of one row: tokens (dense) or pages (paged)."""
+        if self.layout == "paged":
+            return pages_for(max(int(length), 1))
+        return max(int(length), 1)
+
     def account_step(self, lengths) -> None:
-        lens = [max(int(L), 1) for L in lengths]
-        if not lens:
+        units = [self._units(L) for L in lengths]
+        if not units:
             return
-        n, total_len = len(lens), sum(lens)
+        n, total = len(units), sum(units)
         for kind, (base, slope) in self._coeffs().items():
             self.by_kind[kind] = (self.by_kind.get(kind, 0.0)
-                                  + n * base + (total_len - n) * slope)
+                                  + n * base + (total - n) * slope)
 
     def stats(self) -> Dict[str, float]:
         return {f"op_traffic_bytes/{k}": v
                 for k, v in sorted(self.by_kind.items())}
+
+
+def _sample_tokens(key, logits, sampling: SamplingConfig):
+    """The one sampling helper both engines route through (prefill's first
+    token and every decode step): split the engine key once, sample a whole
+    batch of logits.  Returns (new_key, tokens (B,) on device)."""
+    key, sub = jax.random.split(key)
+    return key, sample(logits, sampling, sub)
 
 
 def _percentile_stats(done: List[Request],
@@ -157,9 +180,12 @@ class ServingEngine:
         self._traffic = _OpTrafficMeter(cfg)
         self._key = jax.random.PRNGKey(0)
 
+        # donate the cache tree: the engine drops its reference on return,
+        # so XLA appends the token in place instead of copying every cache
+        # leaf every step (same treatment as the paged pool's donated pools)
         self._decode = jax.jit(partial(M.decode_step, cfg=cfg,
                                        mesh_axes=mesh_axes),
-                               static_argnames=())
+                               donate_argnames=("caches",))
         self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
                                         mesh_axes=mesh_axes))
 
@@ -213,8 +239,8 @@ class ServingEngine:
         self.caches = jax.tree_util.tree_unflatten(
             pool_def, [_row_insert(p, r, slot)
                        for p, r in zip(pool_leaves, row_leaves)])
-        self._key, sub = jax.random.split(self._key)
-        tok = int(sample(logits, self.ecfg.sampling, sub)[0])
+        self._key, toks = _sample_tokens(self._key, logits, self.ecfg.sampling)
+        tok = int(toks[0])
         req.t_first = time.perf_counter()
         req.output.append(tok)
         hit_eos = req.eos_id is not None and tok == req.eos_id
@@ -235,8 +261,7 @@ class ServingEngine:
         logits, self.caches = self._decode(
             self.params, tokens=self.cur_tokens, caches=self.caches,
             lengths=self.lengths, seed=jnp.int32(self.step_count))
-        self._key, sub = jax.random.split(self._key)
-        toks = sample(logits, self.ecfg.sampling, sub)
+        self._key, toks = _sample_tokens(self._key, logits, self.ecfg.sampling)
         self.lengths = self.lengths + jnp.asarray(self.active, jnp.int32)
         self.cur_tokens = toks
         toks_np = np.asarray(toks)
@@ -274,8 +299,8 @@ def _set_row_lengths(caches, slot: int, length: int):
 # Paged engine
 # ===========================================================================
 
-from repro.serving.memory import (PAGE_TOKENS, PagedStatePool,  # noqa: E402
-                                  SpilledRequest, pages_for)
+from repro.serving.memory import (PagedStatePool,  # noqa: E402
+                                  SpilledRequest)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,7 +344,8 @@ class PagedServingEngine:
         self.done: List[Request] = []
         self.step_count = 0
         self.step_times: List[float] = []
-        self._traffic = _OpTrafficMeter(cfg)
+        # account the block-table-native ops this engine actually dispatches
+        self._traffic = _OpTrafficMeter(cfg, layout="paged")
         self.preemptions = 0
         self._occ: List[float] = []
         self._frag: List[float] = []
@@ -365,7 +391,10 @@ class PagedServingEngine:
                "preemptions": float(self.preemptions),
                "occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
                "fragmentation": (float(np.mean(self._frag))
-                                 if self._frag else 0.0)}
+                                 if self._frag else 0.0),
+               # bytes still moved by gather/scatter: spill/resume and
+               # prefill insertion only -- the decode loop contributes zero
+               "gather_bytes": float(self.pool.gather_bytes)}
         out.update(_percentile_stats(self.done, self.step_times))
         out.update(self._traffic.stats())
         return out
@@ -425,7 +454,9 @@ class PagedServingEngine:
         a = _Active(req, length=s0, pending=list(map(int, req.prompt[s0:])),
                     cur_token=-1)
         if not a.pending:
-            tok = self._sample_one(logits)
+            self._key, toks = _sample_tokens(self._key, logits,
+                                             self.pcfg.sampling)
+            tok = int(toks[0])
             req.t_first = time.perf_counter()
             req.output.append(tok)
             a.cur_token = tok
@@ -480,10 +511,6 @@ class PagedServingEngine:
 
     # ------------- the decode step -------------
 
-    def _sample_one(self, logits) -> int:
-        self._key, sub = jax.random.split(self._key)
-        return int(sample(logits, self.pcfg.sampling, sub)[0])
-
     def _step(self):
         self.step_count += 1
         B = self.pcfg.max_decode_batch
@@ -498,8 +525,9 @@ class PagedServingEngine:
         t0 = time.perf_counter()
         logits = self.pool.decode(self.params, self.rows, tokens, lengths,
                                   seed=self.step_count)
-        self._key, sub = jax.random.split(self._key)
-        toks_np = np.asarray(sample(logits, self.pcfg.sampling, sub))
+        self._key, toks = _sample_tokens(self._key, logits,
+                                         self.pcfg.sampling)
+        toks_np = np.asarray(toks)
         self.step_times.append(time.perf_counter() - t0)
         # account at the attended length: the step appends one token at
         # `length` and attends over length+1 (matches ServingEngine, which

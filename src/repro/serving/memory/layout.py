@@ -31,8 +31,9 @@ import numpy as np
 
 from repro.core import attention_cache as AC
 from repro.core import formats as F
-
-PAGE_TOKENS = 128     # tokens per page == the MX tile / kernel alignment unit
+from repro.core import paged as PG
+from repro.core.paged import PAGE_TOKENS  # noqa: F401  (canonical home moved)
+from repro.ops.base import fmt_of_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -352,4 +353,131 @@ class CachePaging:
                                                    page_ids, spec))
             else:
                 out.append(pool.at[slab].set(jnp.asarray(vals)))
+        return out
+
+    # ------------------------------------------------------------------
+    # block-table-native views (the steady-state decode path)
+    # ------------------------------------------------------------------
+    #
+    # paged_view / commit replace gather / scatter_step in the decode loop:
+    # KV pools become PagedKVCache views (zero-copy -- the group-axis
+    # normalization is a reshape) that the layout="paged" SPU ops walk via
+    # the block table; recurrent "S" leaves become PagedState slab views the
+    # paged state_update op updates in place; only the small residual slab
+    # leaves (conv tails, sLSTM carries) are gathered/scattered as B rows --
+    # which is the minimal traffic, since every step rewrites them anyway.
+
+    @staticmethod
+    def _norm_groups(pool: jnp.ndarray, n_lead: int):
+        """(n, *lead, *rest) -> ((n, G, *rest), lead): fold the group-stack
+        axes into one.  A reshape, never a copy."""
+        lead = pool.shape[1:1 + n_lead]
+        g = 1
+        for d in lead:
+            g *= d
+        return pool.reshape((pool.shape[0], g) + pool.shape[1 + n_lead:]), lead
+
+    def _view_stream(self, t, take):
+        """Template KV/state stream -> pool-backed stream + lead shape."""
+        if t is None:
+            return None, ()
+        if isinstance(t, F.QuantizedTensor):
+            payload, lead = {}, ()
+            for f in sorted(t.payload):
+                pool, spec = take()
+                n_lead = (spec.content_time_axis if spec.kind == "page"
+                          else len(spec.content_shape) - 3)
+                payload[f], lead = self._norm_groups(pool, n_lead)
+            return F.QuantizedTensor(t.fmt, tuple(payload["mantissa"].shape),
+                                     payload), lead
+        pool, spec = take()
+        n_lead = (spec.content_time_axis if spec.kind == "page"
+                  else len(spec.content_shape) - 3)
+        return self._norm_groups(pool, n_lead)
+
+    def paged_view(self, pools: Sequence[jnp.ndarray], bt: jnp.ndarray,
+                   slabs: jnp.ndarray, lengths: jnp.ndarray):
+        """Build the paged cache-view tree for one decode step (zero-copy
+        for KV pages and recurrent states; B-row gathers for residual slab
+        leaves).  Structure matches the model's cache tree."""
+        it = iter(zip(pools, self.specs))
+        take = lambda: next(it)
+        group0 = jnp.int32(0)
+
+        def walk(t):
+            if t is None:
+                return None
+            if isinstance(t, AC.KVCache):
+                k, lead = self._view_stream(t.k, take)
+                v, _ = self._view_stream(t.v, take)
+                return PG.PagedKVCache(k, v, bt, lengths, group0,
+                                       t.fmt, t.v_width, tuple(lead))
+            if isinstance(t, dict):
+                out = {}
+                for key in sorted(t):
+                    if key == "S":
+                        s, lead = self._view_stream(t[key], take)
+                        fmt = (t[key].fmt
+                               if isinstance(t[key], F.QuantizedTensor)
+                               else fmt_of_state(t[key]))
+                        out[key] = PG.PagedState(s, slabs, group0, fmt,
+                                                 tuple(lead))
+                    else:
+                        out[key] = walk(t[key])
+                return out
+            if isinstance(t, (tuple, list)):
+                return tuple(walk(a) for a in t)
+            # residual slab leaf: must be a plain array -- a quantized leaf
+            # outside a KVCache / "S" slot would expand to several specs and
+            # silently misalign the pool iterator, so fail loudly instead
+            assert _is_array(t), \
+                f"paged_view: unsupported residual cache leaf {type(t)}"
+            pool, spec = take()
+            return self._gather_slab_leaf(pool, slabs, spec)
+
+        return walk(self.template)
+
+    def _commit_stream(self, stream, take):
+        """Updated pool-backed stream -> pool arrays in spec order."""
+        out = []
+        if stream is None:
+            return out
+        arrays = ([stream.payload[f] for f in sorted(stream.payload)]
+                  if isinstance(stream, F.QuantizedTensor) else [stream])
+        for arr in arrays:
+            _, spec = take()
+            out.append(arr.reshape((arr.shape[0],) + spec.content_shape))
+        return out
+
+    def commit(self, pools: Sequence[jnp.ndarray], new_caches,
+               slabs: jnp.ndarray) -> List[jnp.ndarray]:
+        """Commit one paged decode step: unwrap the (already updated) KV and
+        state pools from the view containers and scatter the residual slab
+        rows back.  The inverse traversal of :meth:`paged_view`."""
+        it = iter(zip(pools, self.specs))
+        take = lambda: next(it)
+        out: List[jnp.ndarray] = []
+
+        def walk(t, c):
+            if t is None:
+                return
+            if isinstance(t, AC.KVCache):
+                out.extend(self._commit_stream(c.k, take))
+                out.extend(self._commit_stream(c.v, take))
+                return
+            if isinstance(t, dict):
+                for key in sorted(t):
+                    if key == "S":
+                        out.extend(self._commit_stream(c[key].pool, take))
+                    else:
+                        walk(t[key], c[key])
+                return
+            if isinstance(t, (tuple, list)):
+                for a, b in zip(t, c):
+                    walk(a, b)
+                return
+            pool, spec = take()
+            out.append(self._scatter_slab_leaf(pool, c, slabs, spec))
+
+        walk(self.template, new_caches)
         return out

@@ -25,7 +25,6 @@ re-pins them to fresh physical ids (identical logits, different placement).
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -33,15 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as OPS
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.core.paged import pages_for  # noqa: F401  (canonical home moved)
 from repro.serving.memory.layout import PAGE_TOKENS, CachePaging
 from repro.serving.memory.placement import BankAwarePlacement, BankTopology
-
-
-def pages_for(n_tokens: int) -> int:
-    """Pages needed to hold ``n_tokens`` cached positions."""
-    return max(1, math.ceil(n_tokens / PAGE_TOKENS))
 
 
 def bucket_pages(npg: int) -> int:
@@ -66,9 +62,12 @@ class PagedStatePool:
 
     def __init__(self, cfg: ModelConfig, n_pages: Optional[int] = None,
                  n_slabs: int = 9, byte_budget: Optional[int] = None,
-                 topology: Optional[BankTopology] = None, mesh_axes=None):
+                 topology: Optional[BankTopology] = None, mesh_axes=None,
+                 decode_mode: str = "paged"):
+        assert decode_mode in ("paged", "gather")
         self.cfg = cfg
         self.mesh_axes = mesh_axes
+        self.decode_mode = decode_mode
         template = M.init_decode_caches(cfg, 1, PAGE_TOKENS)
         t_b2 = M.abstract_decode_caches(cfg, 2, PAGE_TOKENS)
         t_t2 = M.abstract_decode_caches(cfg, 1, 2 * PAGE_TOKENS)
@@ -99,10 +98,33 @@ class PagedStatePool:
         self.page_table: Dict[int, List[int]] = {}     # rid -> page ids
         self.slab_of: Dict[int, int] = {}              # rid -> slab id
 
-        self._decode = jax.jit(self._decode_impl)
-        self._insert = jax.jit(self.paging.insert_request)
+        # steady-state decode: block-table-native paged ops over donated
+        # pools -- XLA updates page slots and slab rows in place instead of
+        # copying every pool every token
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        # dense-gather reference path (parity tests; never donates, so
+        # callers may hold pool snapshots around a reference step)
+        self._decode_gather = jax.jit(self._decode_gather_impl)
+        self._insert = jax.jit(self.paging.insert_request,
+                               donate_argnums=(0,))
         self._extract = jax.jit(self.paging.extract_request)
-        self._insert_blob = jax.jit(self.paging.insert_blob)
+        self._insert_blob = jax.jit(self.paging.insert_blob,
+                                    donate_argnums=(0,))
+
+        # block-table-native op plans (layout="paged"): per-page stream
+        # bytes and per-request slab bytes for the PIM bank model come from
+        # the registered ops' own traffic descriptors, not local formulas
+        entries = OPS.decode_op_plans(cfg, 1, PAGE_TOKENS, layout="paged")
+        self._page_stream_bytes = sum(
+            e.traffic.state_read for e in entries
+            if e.kind in ("attn_decode", "mla_decode"))
+        self._slab_rw_bytes = sum(
+            e.traffic.state_total for e in entries
+            if e.kind == "state_update")
+        #: host-side ledger of bytes still moved by gather/scatter -- which
+        #: after the block-table-native rewire is only preemption
+        #: spill/resume and prefill insertion, never the decode loop
+        self.gather_bytes = 0.0
 
     # ------------------------------------------------------------------
     # allocation
@@ -153,11 +175,16 @@ class PagedStatePool:
     # data movement
     # ------------------------------------------------------------------
 
+    def request_nbytes(self, n_pages: int) -> float:
+        """Physical bytes one request's pages + slab occupy (spill size)."""
+        return n_pages * self.page_nbytes + self.slab_nbytes
+
     def insert_prefill(self, rid: int, row_caches):
         """Pin a prefilled B=1 cache row (T must equal npg*PAGE_TOKENS)."""
         pages = jnp.asarray(self.page_table[rid], jnp.int32)
         slab = jnp.int32(self.slab_of[rid])
         self.pools = self._insert(self.pools, row_caches, pages, slab)
+        self.gather_bytes += self.request_nbytes(len(self.page_table[rid]))
 
     def spill(self, rid: int, length: int) -> SpilledRequest:
         """Evict: copy pages+slab to host bit-exactly, free the device ids."""
@@ -166,6 +193,7 @@ class PagedStatePool:
                              jnp.int32(self.slab_of[rid]))
         host = [np.asarray(x) for x in blob]
         self.release(rid)
+        self.gather_bytes += self.request_nbytes(len(pages))
         return SpilledRequest(host, len(pages), length)
 
     def resume(self, rid: int, sp: SpilledRequest) -> bool:
@@ -176,6 +204,7 @@ class PagedStatePool:
         pages = jnp.asarray(self.page_table[rid], jnp.int32)
         slab = jnp.int32(self.slab_of[rid])
         self.pools = self._insert_blob(self.pools, sp.blob, pages, slab)
+        self.gather_bytes += self.request_nbytes(sp.n_pages)
         return True
 
     # ------------------------------------------------------------------
@@ -183,6 +212,21 @@ class PagedStatePool:
     # ------------------------------------------------------------------
 
     def _decode_impl(self, params, pools, bt, slabs, lengths, tokens, seed):
+        """Block-table-native step: the layout="paged" SPU ops read pages
+        and slab rows straight from the (donated) pools -- no gathered
+        dense cache tree exists in the steady-state loop."""
+        views = self.paging.paged_view(pools, bt, slabs, lengths)
+        logits, new_views = M.paged_decode_step(
+            params, cfg=self.cfg, tokens=tokens, caches=views,
+            lengths=lengths, seed=seed, mesh_axes=self.mesh_axes)
+        pools = self.paging.commit(pools, new_views, slabs)
+        return logits, pools
+
+    def _decode_gather_impl(self, params, pools, bt, slabs, lengths, tokens,
+                            seed):
+        """Dense-gather reference step (the pre-paged-kernel data path):
+        materialize the context, run the dense ops, scatter one token back.
+        Kept for bit-exact parity testing against the paged ops."""
         caches = self.paging.gather(pools, bt, slabs, lengths)
         logits, new_caches = M.decode_step(
             params, cfg=self.cfg, tokens=tokens, caches=caches,
@@ -205,11 +249,18 @@ class PagedStatePool:
     def decode(self, params, rids: Sequence[Optional[int]],
                tokens: np.ndarray, lengths: np.ndarray, seed: int):
         """Run one batched decode step over ``rids`` (None = idle row) and
-        commit the pools.  Returns logits (B, V) on device."""
+        commit the pools.  Returns logits (B, V) on device.
+
+        ``decode_mode="paged"`` (default) runs the block-table-native ops in
+        place over the donated pools; ``"gather"`` runs the dense-gather
+        reference path (parity testing; old pool buffers stay valid).
+        """
         bt = jnp.asarray(self.block_table(rids))
         slabs = jnp.asarray([self.slab_of.get(r, 0) if r is not None else 0
                              for r in rids], jnp.int32)
-        logits, self.pools = self._decode(
+        step = self._decode if self.decode_mode == "paged" \
+            else self._decode_gather
+        logits, self.pools = step(
             params, self.pools, bt, slabs,
             jnp.asarray(lengths, jnp.int32), jnp.asarray(tokens, jnp.int32),
             jnp.int32(seed))
@@ -249,14 +300,23 @@ class PagedStatePool:
 
     def bank_traffic(self, rids: Sequence[int]) -> np.ndarray:
         """Column bursts per (pseudo-channel, bank-pair) for one decode step
-        over ``rids``: every resident page is streamed once (KV attention
-        reads the whole context), every slab is read+written."""
+        over ``rids``: every resident page is streamed once (the paged
+        attention ops read whole 128-token pages in place), every slab row
+        is read+written by the paged state-update op.
+
+        Bytes come from the ``layout="paged"`` ops' own ``traffic(plan)``
+        descriptors (page-granular reads, one-slot writes) -- the same
+        numbers the serving stats account -- so
+        :func:`repro.core.pimsim.placement_step_latency` scores exactly the
+        traffic the dispatched ops move.
+        """
         burst = 32.0
         page_lists = [self.page_table[r] for r in rids if r in self.page_table]
-        m = self.placement.traffic_map(page_lists, self.page_nbytes / burst)
+        m = self.placement.traffic_map(page_lists,
+                                       self._page_stream_bytes / burst)
         topo = self.placement.topo
         for r in rids:
             s = self.slab_of.get(r)
             if s is not None:
-                m[topo.coord(s)] += 2.0 * self.slab_nbytes / burst
+                m[topo.coord(s)] += self._slab_rw_bytes / burst
         return m

@@ -138,10 +138,16 @@ def test_quant_kernel_bitwise(rounding, shape):
 # ---------------------------------------------------------------------------
 
 def _multi_backend_cases():
-    """(kind, fmt) pairs with more than one registered backend."""
+    """Dense-layout (kind, fmt) pairs with more than one registered backend.
+
+    The paged-layout backends get the same treatment in
+    ``tests/test_paged_decode.py``, which also pins them bit-identical to
+    the dense-gather path end to end.
+    """
     cases = {}
-    for kind, backend, fmt in OPS.registered():
-        cases.setdefault((kind, fmt), set()).add(backend)
+    for kind, backend, fmt, layout in OPS.registered():
+        if layout == "dense":
+            cases.setdefault((kind, fmt), set()).add(backend)
     return sorted((k, f, tuple(sorted(bs)))
                   for (k, f), bs in cases.items() if len(bs) > 1)
 

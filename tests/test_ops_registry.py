@@ -19,19 +19,29 @@ from repro.ops.base import SpuDeprecationWarning
 # ---------------------------------------------------------------------------
 
 def test_registry_covers_all_kinds_and_formats():
-    triples = OPS.registered()
-    kinds = {k for k, _, _ in triples}
+    quads = OPS.registered()
+    kinds = {k for k, _, _, _ in quads}
     assert kinds == set(OPS.OP_KINDS)
-    # jnp covers every storage format for every kind
+    assert {lo for _, _, _, lo in quads} == set(OPS.LAYOUTS)
+    # jnp covers every storage format for every kind, in both layouts
     for kind in OPS.OP_KINDS:
         for fmt in ("mx8", "int8", "fp8_e4m3", "fp8_e5m2", "fp32", "bf16",
                     "fp16"):
-            assert OPS.supports(kind, fmt, "jnp"), (kind, fmt)
+            for layout in OPS.LAYOUTS:
+                assert OPS.supports(kind, fmt, "jnp", layout), \
+                    (kind, fmt, layout)
     # the fused pallas kernels exist exactly for MX8 compute ops
     assert OPS.supports("state_update", "mx8", "pallas")
     assert OPS.supports("attn_decode", "mx8", "pallas")
     assert OPS.supports("mla_decode", "mx8", "pallas")
     assert not OPS.supports("state_update", "fp16", "pallas")
+    # ... and their paged twins, plus the in-place paged kv_append (dense
+    # kv_append stays jnp-only: it is an XLA scatter, not an SPU compute op)
+    assert OPS.supports("attn_decode", "mx8", "pallas", "paged")
+    assert OPS.supports("mla_decode", "mx8", "pallas", "paged")
+    assert OPS.supports("state_update", "mx8", "pallas", "paged")
+    assert OPS.supports("kv_append", "mx8", "pallas", "paged")
+    assert not OPS.supports("kv_append", "mx8", "pallas", "dense")
 
 
 def test_resolve_backend_negotiation():

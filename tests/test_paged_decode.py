@@ -1,0 +1,231 @@
+"""Block-table-native paged decode: bit-exact parity with the dense-gather
+path, (kind x backend x format x layout) registry lookups, page-granular
+traffic, and the steady-state loop's freedom from gather/scatter."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ops as OPS
+from repro.configs import get_smoke_config
+from repro.core.state_update import StateQuantConfig
+from repro.models import model as M
+from repro.serving.engine import (EngineConfig, PagedEngineConfig,
+                                  PagedServingEngine, Request, ServingEngine)
+from repro.serving.memory import PAGE_TOKENS, PagedStatePool, pages_for
+
+
+def _build(arch, fmt, backend, rounding):
+    cfg = get_smoke_config(arch).with_(
+        state_quant=StateQuantConfig(fmt=fmt, rounding=rounding,
+                                     backend=backend))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prefill_pool(params, cfg, prompt_len, n_pages=8, n_slabs=5):
+    pool = PagedStatePool(cfg, n_pages=n_pages, n_slabs=n_slabs)
+    rng = np.random.default_rng(prompt_len)
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    pr = jnp.asarray(prompt)[None]
+    logits, row = jax.jit(lambda p, b: M.prefill(p, cfg, b))(
+        params, {"tokens": pr, "targets": pr})
+    assert pool.register(1, pages_for(prompt_len))
+    pool.insert_prefill(1, row)
+    return pool, int(jnp.argmax(logits[0]))
+
+
+def _decode_steps(pool, params, tok, length, n_steps):
+    """Greedy decode steps over a two-row batch (row 1 idle), growing the
+    block table over page boundaries like the engine's headroom check."""
+    outs = []
+    L = np.array([length, 0], np.int32)
+    t = tok
+    for step in range(n_steps):
+        while L[0] // PAGE_TOKENS + 1 > len(pool.page_table[1]):
+            assert pool.grow(1, 1)
+        lg = pool.decode(params, [1, None], np.array([t, 0], np.int32),
+                         L, seed=step + 1)
+        outs.append(np.asarray(lg))
+        t = int(jnp.argmax(lg[0]))
+        L[0] += 1
+    return outs
+
+
+# two archs (one attention, one SSM) x both backends x lengths straddling
+# a page boundary: 127 (tail slot of page 1), 128 (page-exact), 129 (page 2);
+# plus the novel pallas kernel branches -- MLA's latent-only cache (dummy V
+# refs) and zamba2's shared-attention group re-binding -- on the boundary pair
+PARITY_MATRIX = [
+    (arch, fmt, backend, L)
+    for arch in ("llama3.2-1b", "mamba2-2.7b")
+    for fmt, backend in (("mx8", "pallas"), ("mx8", "jnp"),
+                         ("fp32", "jnp"))
+    for L in (127, 128, 129)
+] + [
+    (arch, "mx8", "pallas", L)
+    for arch in ("deepseek-v2-236b", "zamba2-2.7b")
+    for L in (127, 129)
+]
+
+
+@pytest.mark.parametrize(
+    "arch,fmt,backend,length", PARITY_MATRIX,
+    ids=[f"{a}-{f}-{b}-L{L}" for a, f, b, L in PARITY_MATRIX])
+def test_paged_decode_bit_identical_to_dense_gather(arch, fmt, backend,
+                                                    length):
+    """Steady-state paged decode must produce bit-identical logits to the
+    dense-gather reference path, across the page boundary."""
+    rounding = "stochastic" if fmt == "mx8" else "nearest"
+    params, cfg = _build(arch, fmt, backend, rounding)
+    pool, tok = _prefill_pool(params, cfg, length)
+    snapshot = [np.asarray(x) for x in pool.pools]
+    pages0 = list(pool.page_table[1])
+
+    pool.decode_mode = "gather"
+    ref = _decode_steps(pool, params, tok, length, n_steps=2)
+
+    pool.pools = [jnp.asarray(x) for x in snapshot]
+    grown = [p for p in pool.page_table[1] if p not in pages0]
+    if grown:
+        pool.placement.free(grown)
+    pool.page_table[1] = list(pages0)
+    pool.decode_mode = "paged"
+    got = _decode_steps(pool, params, tok, length, n_steps=2)
+
+    for step, (a, b) in enumerate(zip(ref, got)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{arch}/{fmt}/{backend}/L={length} step {step}")
+
+
+# ---------------------------------------------------------------------------
+# registry: the layout axis
+# ---------------------------------------------------------------------------
+
+def test_registry_lookup_errors_list_quadruples():
+    """(kind x backend x format x layout) lookup failures name the
+    registered quadruples, layout included."""
+    with pytest.raises(KeyError) as ei:
+        OPS.get_op("attn_decode", "pallas", "fp32", "paged")
+    msg = str(ei.value)
+    assert "layout 'paged'" in msg
+    assert "attn_decode[pallas:mx8:paged]" in msg
+    assert "attn_decode[jnp:fp32:dense]" in msg
+
+    with pytest.raises(ValueError, match="layout 'paged'"):
+        OPS.resolve_backend("attn_decode", "fp32", "pallas",
+                            layout="paged", strict=True)
+    # negotiation is per-layout: fp32 paged falls back to the jnp paged op
+    assert OPS.resolve_backend("attn_decode", "fp32", "pallas",
+                               layout="paged") == "jnp"
+    with pytest.raises(ValueError, match="unknown op layout"):
+        class Bad(OPS.SpuOp):
+            kind = "attn_decode"
+            backend = "jnp"
+            formats = ("fp32",)
+            layout = "ragged"
+        OPS.register(Bad)
+
+
+def test_paged_plans_carry_layout():
+    cfg = get_smoke_config("llama3.2-1b")
+    dense = OPS.decode_op_plans(cfg, 2, 200)
+    paged = OPS.decode_op_plans(cfg, 2, 200, layout="paged")
+    assert {e.plan.layout for e in dense} == {"dense"}
+    assert {e.plan.layout for e in paged} == {"paged"}
+
+
+def test_paged_attention_traffic_is_page_granular():
+    """A 129-token context streams two whole pages under the paged ops;
+    the append writes one row regardless of context length."""
+    quant = OPS.StateQuantConfig(fmt="mx8", rounding="nearest", backend="jnp")
+    dims = dict(B=2, T=129, KVH=2, dk=64, dv=64, n=1, H=4)
+    paged = OPS.traffic(OPS.plan_attn_decode_dims(
+        "attn_decode", dims, quant, layout="paged"))
+    dense = OPS.traffic(OPS.plan_attn_decode_dims("attn_decode", dims, quant))
+    bits = OPS.fmt_bits("mx8")
+    row_vals = 2 * (64 + 64)
+    assert paged.state_read == pytest.approx(2 * 2 * PAGE_TOKENS * row_vals
+                                             * bits / 8.0)
+    assert dense.state_read == pytest.approx(2 * 129 * row_vals * bits / 8.0)
+    ap = OPS.traffic(OPS.plan("kv_append", dims, quant, "jnp",
+                              layout="paged"))
+    ad = OPS.traffic(OPS.plan("kv_append", dims, quant, "jnp"))
+    assert ap.state_write == pytest.approx(ad.state_write)  # one row each
+    dims_big = dict(dims, T=4 * PAGE_TOKENS)
+    ap_big = OPS.traffic(OPS.plan("kv_append", dims_big, quant, "jnp",
+                                  layout="paged"))
+    assert ap_big.state_write == pytest.approx(ap.state_write)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: donation, retraces, residual gather accounting
+# ---------------------------------------------------------------------------
+
+def test_slotted_engine_donation_no_retrace():
+    """donate_argnames on the slotted engine's decode jit must not retrace:
+    one compiled executable serves every step."""
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, EngineConfig(slots=2,
+                                                  cache_capacity=128))
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 8
+                                               ).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.output) == 4 for r in done)
+    assert eng._decode._cache_size() == 1, "decode retraced"
+
+
+def test_paged_engine_gather_bytes_only_at_the_edges():
+    """Steady-state decode moves zero gather/scatter bytes: the ledger grows
+    only at prefill insertion (and spill/resume), never per decode step."""
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=2, n_pages=7, n_slabs=5))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (9, 17)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    eng._admit()
+    after_prefill = eng.pool.gather_bytes
+    expected = sum(eng.pool.request_nbytes(pages_for(len(p)))
+                   for p in prompts)
+    assert after_prefill == pytest.approx(expected)
+    done = eng.run()
+    assert len(done) == 2 and eng.preemptions == 0
+    assert eng.pool.gather_bytes == pytest.approx(after_prefill), \
+        "decode steps moved gather/scatter bytes"
+    stats = eng.stats()
+    assert stats["gather_bytes"] == pytest.approx(after_prefill)
+    assert any(k.startswith("op_traffic_bytes/") for k in stats)
+
+
+def test_paged_engine_spill_resume_accounts_gather_bytes(tmp_path):
+    """Preemption still rides gather/scatter -- and is accounted as such."""
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=2, n_pages=4, n_slabs=5, prefill_chunk=128))
+    rng = np.random.default_rng(3)
+    for i in range(2):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 120
+                                               ).astype(np.int32),
+                           max_new_tokens=12))
+    done = eng.run()
+    assert len(done) == 2 and eng.preemptions >= 1
+    # every preemption costs one spill + one resume on top of the prefills
+    min_expected = (2 + 2 * eng.preemptions) * eng.pool.request_nbytes(1)
+    assert eng.pool.gather_bytes >= min_expected

@@ -158,12 +158,14 @@ def test_preemption_roundtrip_bit_identical_logits(tiny):
         tok = int(jnp.argmax(lg[0]))
         lengths[0] += 1
 
-    snapshot = list(pool.pools)                  # jnp arrays are immutable
+    # host-copy snapshot: the decode step *donates* the pools (in-place
+    # page/slab updates), so device-side references would be deleted
+    snapshot = [np.asarray(x) for x in pool.pools]
     pages_before = list(pool.page_table[7])
     lg_a = np.asarray(pool.decode(params, [7, None],
                                   np.array([tok, 0], np.int32),
                                   lengths, seed=42))
-    pool.pools = snapshot                        # rewind the committed step
+    pool.pools = [jnp.asarray(x) for x in snapshot]  # rewind the step
 
     sp = pool.spill(7, int(lengths[0]))          # evict to host
     assert 7 not in pool.page_table
