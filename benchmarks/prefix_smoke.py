@@ -1,0 +1,97 @@
+"""16-token shared-prefix smoke (CI tier 2).
+
+One 130-token prompt, four copy-on-write forked continuations of four
+tokens each (16 generated tokens total).  Fails if:
+
+  * the forked path re-prefills the shared prompt (prefill-token ledger
+    must show the prompt ingested exactly once, plus one fed parent token
+    per fork), or
+  * prefix sharing stops saving pages (forks must allocate strictly fewer
+    pages than four independent submissions of the same prompt), or
+  * a forked continuation diverges from the unshared re-prefill reference
+    (greedy, fp32 -- tokens must match bit-for-bit).
+
+    PYTHONPATH=src python benchmarks/prefix_smoke.py
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--forks", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.state_update import StateQuantConfig
+    from repro.models import model as M
+    from repro.serving.api import Engine, ServeConfig
+
+    cfg = get_smoke_config(args.arch).with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 130).astype(np.int32)
+    scfg = ServeConfig(backend="paged", batch=4, n_pages=17, n_slabs=11)
+
+    # forked: prefix prefilled once, N CoW continuations
+    eng = Engine(params, cfg, scfg)
+    parent = eng.submit(prompt, max_new_tokens=1, retain=True)
+    parent.result()
+    kids = [eng.fork(parent, max_new_tokens=args.max_new)
+            for _ in range(args.forks)]
+    eng.run()
+    st = eng.stats()
+
+    # independent baseline: the same continuation context, re-prefilled
+    eng_i = Engine(params, cfg, scfg)
+    full = np.concatenate([prompt, np.asarray(parent.output, np.int32)])
+    refs = [eng_i.submit(full, max_new_tokens=args.max_new)
+            for _ in range(args.forks)]
+    eng_i.run()
+    st_i = eng_i.stats()
+
+    expected_ingest = len(prompt) + args.forks  # prompt once + 1 fed tok/fork
+    print(f"forked:      prefill_tokens={st['prefill_tokens']:.0f} "
+          f"(floor {expected_ingest}), pages={st['pages_allocated']:.0f}, "
+          f"shared_hits={st['shared_page_hits']:.0f}")
+    print(f"independent: prefill_tokens={st_i['prefill_tokens']:.0f}, "
+          f"pages={st_i['pages_allocated']:.0f}")
+
+    ok = True
+    if st["prefill_tokens"] > expected_ingest:
+        print("FAIL: forked decode re-prefilled the shared prompt "
+              f"({st['prefill_tokens']:.0f} > {expected_ingest} ingested "
+              "tokens)", file=sys.stderr)
+        ok = False
+    if not st["pages_allocated"] < st_i["pages_allocated"]:
+        print("FAIL: prefix sharing allocated no fewer pages than "
+              "independent submissions", file=sys.stderr)
+        ok = False
+    if st["shared_page_hits"] < args.forks:
+        print("FAIL: forks took no copy-on-write page references",
+              file=sys.stderr)
+        ok = False
+    for k, r in zip(kids, refs):
+        if k.output != r.output:
+            print(f"FAIL: fork {k.rid} diverged from the unshared "
+                  f"re-prefill reference: {k.output} != {r.output}",
+                  file=sys.stderr)
+            ok = False
+    if ok:
+        print(f"OK: {args.forks} forks x {args.max_new} tokens bit-exact, "
+              f"{st_i['prefill_tokens'] - st['prefill_tokens']:.0f} prefill "
+              f"tokens and {st_i['pages_allocated'] - st['pages_allocated']:.0f} "
+              "pages saved")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

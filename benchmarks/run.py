@@ -15,6 +15,9 @@ reproduced (a ratio, error, or tokens/s).
   kernel_state_update       fused kernel vs unfused jnp on CPU (interpret)
   kernel_attention          decode attention kernel vs ref
   serving_throughput        engine tokens/s vs batch (tiny model, real compute)
+  serving_open_loop         Poisson arrivals driving Engine.step(): goodput
+  serving_shared_prefix     CoW fork vs N independent submissions: prefill
+                            tokens + allocated pages saved
 """
 from __future__ import annotations
 
@@ -26,6 +29,16 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# one artifact shared by the serving benches; each contributor rewrites the
+# file so a partial run still leaves a valid BENCH_serving.json
+SERVING_ARTIFACT: dict = {}
+
+
+def _dump_serving_artifact():
+    import json
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(SERVING_ARTIFACT, f, indent=2, default=float)
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -210,7 +223,6 @@ def kernel_attention():
 
 
 def serving_throughput():
-    import json
     from repro.configs import get_smoke_config
     from repro.models import model as M
     from repro.serving.engine import (EngineConfig, PagedEngineConfig,
@@ -219,7 +231,7 @@ def serving_throughput():
     cfg = get_smoke_config("mamba2-2.7b")
     params = M.init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    artifact = {}
+    artifact = SERVING_ARTIFACT
     # one mixed prompt set shared by the slots4 and paged rows, so the
     # paged_vs_slots ratio compares pools, not workloads (prefill compiles
     # per distinct prompt length and would otherwise skew the wall clock)
@@ -269,14 +281,131 @@ def serving_throughput():
          f"occupancy={stats['occupancy']:.2f};"
          f"fragmentation={stats['fragmentation']:.2f};"
          f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f}")
-    with open("BENCH_serving.json", "w") as f:
-        json.dump(artifact, f, indent=2, default=float)
+    _dump_serving_artifact()
+
+
+def serving_open_loop():
+    """Open-loop load generation: Poisson arrivals at a configurable rate
+    drive `Engine.step()` (no drain-to-empty batching artifacts).  Emits
+    goodput -- the fraction of requests whose end-to-end latency met a
+    fixed deadline budget -- alongside achieved throughput."""
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.api import Engine, ServeConfig
+    cfg = get_smoke_config("mamba2-2.7b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req, max_new, budget_s = 8, 6, 2.0
+    # one shared prompt length: a single prefill trace, so the measured
+    # open-loop latency is decode scheduling, not compile time
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(n_req)]
+
+    for rate in (5.0, 50.0):
+        eng = Engine(params, cfg, ServeConfig(backend="paged", batch=4,
+                                              n_pages=9, n_slabs=9))
+        # jit caches are per-engine: warm *this* engine's prefill/decode
+        # traces (full batch so the bucketed decode shape compiles too)
+        # before the arrival clock starts, so goodput measures scheduling,
+        # not XLA compile time
+        for p in prompts[:4]:
+            eng.submit(p, max_new_tokens=2)
+        eng.run()
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_req))
+        handles = []
+        t0 = time.perf_counter()
+        nxt = 0
+        while nxt < n_req or any(not h.finished for h in handles):
+            now = time.perf_counter() - t0
+            while nxt < n_req and arrivals[nxt] <= now:
+                handles.append(eng.submit(prompts[nxt],
+                                          max_new_tokens=max_new))
+                nxt += 1
+            if eng.has_work():
+                eng.step()
+            elif nxt < n_req:
+                time.sleep(min(arrivals[nxt] - now, 1e-3))
+        dt = time.perf_counter() - t0
+        # metrics over the measured handles only (the warm-up batch is
+        # excluded; engine.stats() would mix it in)
+        lats = [h.request.t_done - h.request.t_submit for h in handles
+                if h.status == "done"]
+        ttfts = [h.request.t_first - h.request.t_submit for h in handles
+                 if h.request.t_first > 0]
+        goodput = sum(1 for L in lats if L <= budget_s) / n_req
+        toks = sum(len(h.output) for h in handles)
+        row = {
+            "rate_rps": rate, "goodput": goodput,
+            "deadline_budget_s": budget_s,
+            "tokens_per_s": toks / max(dt, 1e-9),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+            "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0,
+        }
+        SERVING_ARTIFACT[f"open_loop_rate{rate:g}"] = row
+        emit(f"serving/open_loop/rate{rate:g}", dt / n_req * 1e6,
+             f"goodput={goodput:.2f};tokens_per_s={row['tokens_per_s']:.2f};"
+             f"p99_ttft_ms={row['p99_ttft_s']*1e3:.1f}")
+    _dump_serving_artifact()
+
+
+def serving_shared_prefix():
+    """Copy-on-write prefix sharing vs N independent submissions of the
+    same prompt: fewer prefill tokens (the shared prefix is ingested once)
+    and fewer allocated pages (full prefix pages are refcounted, only the
+    tail page is copied per fork)."""
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.api import Engine, ServeConfig
+    cfg = get_smoke_config("mamba2-2.7b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_forks, max_new = 4, 4
+    prompt = rng.integers(0, cfg.vocab_size, 140).astype(np.int32)
+    scfg = ServeConfig(backend="paged", batch=4, n_pages=17, n_slabs=11)
+
+    # N independent submissions: every request re-prefills + re-pins
+    eng_i = Engine(params, cfg, scfg)
+    t0 = time.perf_counter()
+    for _ in range(n_forks):
+        eng_i.submit(prompt, max_new_tokens=max_new)
+    eng_i.run()
+    dt_i = time.perf_counter() - t0
+    st_i = eng_i.stats()
+
+    # one parent + N copy-on-write forks: prefix prefilled and pinned once
+    eng_f = Engine(params, cfg, scfg)
+    t0 = time.perf_counter()
+    parent = eng_f.submit(prompt, max_new_tokens=1, retain=True)
+    parent.result()
+    kids = [eng_f.fork(parent, max_new_tokens=max_new)
+            for _ in range(n_forks)]
+    eng_f.run()
+    dt_f = time.perf_counter() - t0
+    st_f = eng_f.stats()
+    assert all(k.status == "done" for k in kids)
+
+    saved_tokens = st_i["prefill_tokens"] - st_f["prefill_tokens"]
+    saved_pages = st_i["pages_allocated"] - st_f["pages_allocated"]
+    SERVING_ARTIFACT["shared_prefix"] = {
+        "n_forks": n_forks, "prompt_tokens": len(prompt),
+        "independent": st_i, "forked": st_f,
+        "prefill_tokens_saved": saved_tokens,
+        "pages_saved": saved_pages,
+        "shared_page_hits": st_f["shared_page_hits"],
+    }
+    emit("serving/shared_prefix", dt_f / n_forks * 1e6,
+         f"prefill_tokens={st_f['prefill_tokens']:.0f}"
+         f"(vs{st_i['prefill_tokens']:.0f});"
+         f"pages={st_f['pages_allocated']:.0f}"
+         f"(vs{st_i['pages_allocated']:.0f});"
+         f"speedup_vs_independent={dt_i/max(dt_f, 1e-9):.2f}")
+    _dump_serving_artifact()
 
 
 BENCHES = [fig3_latency_breakdown, fig4_swamping, fig5a_pim_designs,
            fig6_area_accuracy, fig12_generation, fig13_latency_reduction,
            fig15_latency_memory, kernel_state_update, kernel_attention,
-           serving_throughput]
+           serving_throughput, serving_open_loop, serving_shared_prefix]
 
 
 def main() -> None:

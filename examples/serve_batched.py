@@ -1,8 +1,15 @@
-"""Batched serving driver: the Pimba system loop on a small SU-LLM.
+"""Streaming multi-turn chat on the request-lifecycle serving facade.
 
-Continuous batching over MX8-quantized recurrent states -- requests arrive,
-prefill on the chunked "GPU path", decode through the fused state-update
-kernel, slots recycle as requests finish.
+One `Engine` (paged, bank-aware pool), three concurrent "users":
+
+  * user A chats for --turns turns through a `Session` -- every turn after
+    the first *forks* the previous one copy-on-write, so the conversation
+    history is never re-prefilled;
+  * user B streams a long one-shot generation token by token;
+  * user C submits a request and aborts it mid-decode.
+
+All three share the same continuous decode batch; tokens surface from
+`Engine.step()` as they are sampled.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-2.7b]
 """
@@ -15,7 +22,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.state_update import StateQuantConfig
 from repro.models import model as M
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.api import Engine, ServeConfig
 from repro.serving.sampler import SamplingConfig
 
 
@@ -23,13 +30,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b",
                     help="any arch with a decode path (smoke-size weights)")
-    ap.add_argument("--requests", type=int, default=10)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--turns", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--state-format", default="mx8",
                     choices=["mx8", "int8", "fp16", "fp32"])
-    ap.add_argument("--paged", action="store_true",
-                    help="serve from the paged, bank-aware state/KV pool")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).with_(
@@ -38,32 +42,50 @@ def main():
                                      backend="pallas" if args.state_format ==
                                      "mx8" else "jnp"))
     params = M.init_model(jax.random.PRNGKey(0), cfg)
-    sampling = SamplingConfig(temperature=0.8, top_k=40, top_p=0.95)
-    if args.paged:
-        from repro.serving.engine import PagedEngineConfig, PagedServingEngine
-        eng = PagedServingEngine(params, cfg, PagedEngineConfig(
-            max_decode_batch=args.slots, n_pages=2 * args.slots + 1,
-            n_slabs=2 * args.slots + 1, sampling=sampling))
-    else:
-        eng = ServingEngine(params, cfg,
-                            EngineConfig(slots=args.slots, cache_capacity=128,
-                                         sampling=sampling))
+    eng = Engine(params, cfg, ServeConfig(
+        backend="paged", batch=4, n_pages=17, n_slabs=9,
+        sampling=SamplingConfig(temperature=0.8, top_k=40, top_p=0.95)))
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        eng.submit(Request(rid=i,
-                           prompt=rng.integers(0, cfg.vocab_size,
-                                               8 + i % 16).astype(np.int32),
-                           max_new_tokens=args.max_new))
     t0 = time.perf_counter()
-    done = eng.run()
-    wall = time.perf_counter() - t0
+
+    # --- user B: a long streaming generation riding in the same batch
+    b = eng.submit(rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                   max_new_tokens=4 * args.max_new)
+    # --- user C: submitted, then cancelled mid-decode
+    c = eng.submit(rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                   max_new_tokens=4 * args.max_new)
+
+    # --- user A: multi-turn chat over copy-on-write prefix sharing
+    chat = eng.session()
+    for turn in range(args.turns):
+        prompt = rng.integers(0, cfg.vocab_size, 8 + 4 * turn
+                              ).astype(np.int32)
+        h = chat.send(prompt, max_new_tokens=args.max_new)
+        print(f"[A turn {turn}] user sent {len(prompt)} tokens")
+        for tok in h:                       # streams; B and C decode too
+            print(f"[A turn {turn}] {tok}", end=" ", flush=True)
+            if turn == 1 and c.status == "running" and len(c.output) > 4:
+                c.abort()
+                print(f"\n[C] aborted mid-decode after "
+                      f"{len(c.output)} tokens", end="")
+        print()
+        got_b = b.new_tokens()
+        if got_b:
+            print(f"[B] streamed {len(got_b)} tokens meanwhile "
+                  f"(status={b.status})")
+    chat.close()
+    b.result()                              # drain whatever B has left
+
     stats = eng.stats()
-    print(f"arch={cfg.name} state={args.state_format} slots={args.slots}")
-    print(f"served {len(done)} requests, {stats['tokens']} tokens "
-          f"in {wall:.2f}s -> {stats['tokens_per_s']:.1f} tok/s "
-          f"(mean TTFT {stats['mean_ttft_s']*1e3:.0f} ms)")
-    for r in done[:3]:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
+    wall = time.perf_counter() - t0
+    print(f"\narch={cfg.name} state={args.state_format} "
+          f"{stats['tokens']:.0f} tokens in {wall:.2f}s "
+          f"-> {stats['tokens_per_s']:.1f} tok/s")
+    print(f"sessions skipped re-prefill: {stats['prefill_tokens']:.0f} "
+          f"tokens ingested for the whole chat, "
+          f"{stats['shared_page_hits']:.0f} shared-page hits, "
+          f"{stats['requests_aborted']:.0f} aborted, "
+          f"{stats['requests_done']:.0f} done")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,20 @@
 """Production serving launcher: the Pimba system loop.
 
+Paged, bank-aware pool (default) with the preempting scheduler:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --smoke-size --paged --pages 33 --requests 16 --mixed \
+        --policy priority --top-p 0.95 --seed 7
+
 Fixed-slot pool (legacy):
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
         --smoke-size --requests 12 --slots 4 --state-format mx8
 
-Paged, bank-aware pool with the preempting scheduler:
-
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --smoke-size --paged --pages 33 --requests 16 --mixed \
-        --policy priority --top-p 0.95 --seed 7
+Both serve through the request-lifecycle facade (`repro.serving.api.Engine`):
+`--stream` drives the engine open-loop and prints tokens as they are
+sampled; `--turns N` runs a multi-turn session on copy-on-write prefix
+sharing after the batch drains (paged only).
 
 Weights come from --ckpt-dir (a training checkpoint) or random init.
 """
@@ -59,6 +64,13 @@ def main(argv=None):
                     choices=["fcfs", "priority", "deadline"])
     ap.add_argument("--mixed", action="store_true",
                     help="mixed workload: short and long prompts")
+    # request-lifecycle demos
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the engine open-loop (step()) and print "
+                         "each request's tokens as they are sampled")
+    ap.add_argument("--turns", type=int, default=0,
+                    help="after the batch: run a --turns-turn chat session "
+                         "on copy-on-write prefix sharing (paged only)")
     args = ap.parse_args(argv)
 
     import jax
@@ -66,9 +78,7 @@ def main(argv=None):
     from repro import ops as OPS
     from repro.configs import get_config, get_smoke_config
     from repro.models import model as M
-    from repro.serving.engine import (EngineConfig, PagedEngineConfig,
-                                      PagedServingEngine, Request,
-                                      ServingEngine)
+    from repro.serving.api import Engine, ServeConfig
     from repro.serving.sampler import SamplingConfig
     from repro.serving.scheduler import SchedulerConfig
 
@@ -76,6 +86,9 @@ def main(argv=None):
            else get_config(args.arch))
     if cfg.encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: nothing to serve")
+    if args.turns and not args.paged:
+        raise SystemExit("--turns needs --paged (sessions are built on "
+                         "copy-on-write prefix sharing in the paged pool)")
     # capability lookup in the SPU op registry (replaces the old inline
     # "pallas if mx8 else jnp" heuristic): every SPU *compute* op this model
     # dispatches must support a concrete requested triple, so a bad
@@ -110,36 +123,48 @@ def main(argv=None):
     sampling = SamplingConfig(temperature=args.temperature,
                               top_k=40 if args.temperature > 0 else 0,
                               top_p=args.top_p)
-    if args.paged:
-        eng = PagedServingEngine(params, cfg, PagedEngineConfig(
-            max_decode_batch=args.slots, n_pages=args.pages,
-            n_slabs=args.slabs or 2 * args.slots + 1,
-            prefill_chunk=args.prefill_chunk, sampling=sampling,
-            scheduler=SchedulerConfig(policy=args.policy), seed=args.seed))
-    else:
-        eng = ServingEngine(params, cfg, EngineConfig(
-            slots=args.slots, cache_capacity=args.cache_capacity,
-            sampling=sampling))
+    scfg = ServeConfig(
+        backend="paged" if args.paged else "slots",
+        batch=args.slots,
+        cache_capacity=args.cache_capacity,
+        n_pages=args.pages,
+        n_slabs=args.slabs,
+        prefill_chunk=args.prefill_chunk,
+        sampling=sampling,
+        scheduler=SchedulerConfig(policy=args.policy),
+        seed=args.seed)
+    eng = Engine(params, cfg, scfg)
 
     rng = np.random.default_rng(args.seed)
+    handles = []
     for i in range(args.requests):
         if args.mixed:
             # alternate short prompts with multi-page long ones
             n = 8 + i % 24 if i % 3 else 130 + 16 * (i % 4)
         else:
             n = 8 + i % 24
-        eng.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+        handles.append(eng.submit(
+            rng.integers(0, cfg.vocab_size, n).astype(np.int32),
             max_new_tokens=args.max_new,
             priority=i % 3 if args.policy == "priority" else 0,
             deadline=(time.time() + 1 + i % 5
                       if args.policy == "deadline" else None)))
     t0 = time.perf_counter()
-    done = eng.run()
+    if args.stream:
+        # open-loop: one step at a time, tokens printed as they surface
+        running = True
+        while running:
+            running = eng.step()
+            for h in handles:
+                got = h.new_tokens()
+                if got:
+                    print(f"  req {h.rid} [{h.status}] += {got}")
+        done = [h.request for h in handles]
+    else:
+        done = eng.run()
     stats = eng.stats()
     pool = "paged" if args.paged else "slots"
-    print(f"{len(done)} requests, {stats['tokens']} tokens, "
+    print(f"{len(done)} requests, {stats['tokens']:.0f} tokens, "
           f"{stats['tokens_per_s']:.1f} tok/s "
           f"(wall {time.perf_counter()-t0:.1f}s, state={args.state_format}, "
           f"backend={backend}, pool={pool})")
@@ -158,11 +183,28 @@ def main(argv=None):
         print(f"  occupancy={stats['occupancy']:.2f} "
               f"fragmentation={stats['fragmentation']:.2f} "
               f"preemptions={int(stats['preemptions'])}")
-        rep = eng.bank_report()
+        rep = eng.engine.bank_report()
         print(f"  pimsim page-map: step={rep['t_real_s']*1e6:.2f}us "
               f"ideal={rep['t_ideal_s']*1e6:.2f}us "
               f"conflict_factor={rep['conflict_factor']:.2f} "
               f"bank_imbalance={rep['imbalance']:.2f}")
+
+    if args.turns:
+        print(f"-- {args.turns}-turn session (copy-on-write prefix "
+              "sharing; turn N skips re-prefilling the history) --")
+        chat = eng.session()
+        before = eng.stats()["prefill_tokens"]
+        for t in range(args.turns):
+            turn = rng.integers(0, cfg.vocab_size, 8 + t).astype(np.int32)
+            h = chat.send(turn, max_new_tokens=args.max_new)
+            print(f"  turn {t}: sent {len(turn)} tokens -> "
+                  f"{list(h)}")
+        after = eng.stats()["prefill_tokens"]
+        chat.close()
+        print(f"  session ingested {after - before:.0f} fresh tokens "
+              f"({eng.stats()['shared_page_hits']:.0f} shared-page hits; "
+              "an unshared engine would re-prefill the whole history "
+              "every turn)")
     return 0
 
 

@@ -1,6 +1,10 @@
 """Batched serving engines: the Pimba system loop (paper Fig. 7).
 
-Two engines share the request/stats machinery:
+Two engines share the request-lifecycle machinery (``_EngineCore``): an
+explicit ``step()`` event loop (admit + one batched decode step) that
+callers can drive open-loop, ``submit`` / ``abort`` with terminal statuses
+(``done`` / ``aborted`` / ``truncated``), and a ``run()`` drain wrapper.
+The streaming facade over them lives in :mod:`repro.serving.api`.
 
 ``ServingEngine`` -- the original fixed-slot pool: continuous batching over
 ``slots x cache_capacity`` preallocated caches.  One long request dictates
@@ -12,7 +16,11 @@ long prompts coexist in the same byte budget, admission follows a
 priority/deadline scheduler (``serving/scheduler``), prefill is chunked
 (the tail of a long prompt streams through the shared decode step instead
 of blocking the batch), and the pool preempts by page eviction -- victim
-pages spill to host bit-exactly and resume re-pins them.
+pages spill to host bit-exactly and resume re-pins them.  It additionally
+supports **retained** requests (finished but still pinning their pages) and
+copy-on-write ``fork`` of a retained parent: the child shares the parent's
+full prefix pages by reference and skips re-prefill entirely (multi-turn
+sessions, N parallel continuations of one prompt).
 
 The cache pool is MX8 by default -- the 8-bit state is what makes slot
 memory ~2x smaller than the fp16 baseline (paper Fig. 1a, 15b).
@@ -22,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,12 +38,15 @@ import numpy as np
 
 from repro import ops as OPS
 from repro.core import attention_cache as AC
-from repro.core import formats as F
 from repro.core.paged import PAGE_TOKENS, pages_for
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.sampler import SamplingConfig, sample
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+#: terminal request statuses -- a request in one of these will never
+#: produce another token
+TERMINAL_STATUSES = ("done", "aborted", "truncated")
 
 
 @dataclasses.dataclass
@@ -46,12 +57,21 @@ class Request:
     eos_id: Optional[int] = None
     priority: int = 0                  # lower = more urgent (paged engine)
     deadline: Optional[float] = None   # absolute time (paged engine, EDF)
+    retain: bool = False               # keep pages pinned after finish
+                                       # (paged engine: enables fork())
+    parent_rid: Optional[int] = None   # copy-on-write fork parent
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
+    status: str = "new"                # new|queued|running|done|aborted|
+                                       # truncated
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
     truncated: bool = False            # ran out of pool pages mid-generation
+
+    @property
+    def finished(self) -> bool:
+        return self.status in TERMINAL_STATUSES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +79,7 @@ class EngineConfig:
     slots: int = 4                    # decode batch size
     cache_capacity: int = 256         # max context per slot (tile-aligned)
     sampling: SamplingConfig = SamplingConfig()
+    seed: int = 0                     # sampling PRNG seed
 
 
 class _OpTrafficMeter:
@@ -74,6 +95,8 @@ class _OpTrafficMeter:
     pages stream, appends write one slot).  Either way the descriptors are
     probed once at two operating points and each step costs O(kinds), not
     O(rows) registry walks -- no per-slot Python work in the decode loop.
+    The paged engine passes pre-deduplicated units so a copy-on-write
+    shared page is attributed once per step, not once per reader.
     """
 
     def __init__(self, cfg: ModelConfig, layout: str = "dense"):
@@ -100,14 +123,16 @@ class _OpTrafficMeter:
             return pages_for(max(int(length), 1))
         return max(int(length), 1)
 
-    def account_step(self, lengths) -> None:
-        units = [self._units(L) for L in lengths]
+    def account_units(self, units: Sequence[int]) -> None:
         if not units:
             return
         n, total = len(units), sum(units)
         for kind, (base, slope) in self._coeffs().items():
             self.by_kind[kind] = (self.by_kind.get(kind, 0.0)
                                   + n * base + (total - n) * slope)
+
+    def account_step(self, lengths) -> None:
+        self.account_units([self._units(L) for L in lengths])
 
     def stats(self) -> Dict[str, float]:
         return {f"op_traffic_bytes/{k}": v
@@ -124,8 +149,17 @@ def _sample_tokens(key, logits, sampling: SamplingConfig):
 
 def _percentile_stats(done: List[Request],
                       step_times: List[float]) -> Dict[str, float]:
-    """TTFT and per-token latency percentiles shared by both engines."""
-    out: Dict[str, float] = {}
+    """TTFT and per-token latency percentiles shared by both engines.
+
+    Always returns the full key schema -- zeros when no request has reached
+    the corresponding milestone -- so downstream consumers
+    (``BENCH_serving.json``, dashboards) never key-error on an idle engine.
+    """
+    out: Dict[str, float] = {
+        "mean_ttft_s": 0.0, "p50_ttft_s": 0.0, "p99_ttft_s": 0.0,
+        "p50_step_s": 0.0, "p99_step_s": 0.0,
+        "p50_tok_latency_s": 0.0, "p99_tok_latency_s": 0.0,
+    }
     ttfts = [r.t_first - r.t_submit for r in done if r.t_first > 0]
     if ttfts:
         out["p50_ttft_s"] = float(np.percentile(ttfts, 50))
@@ -159,12 +193,140 @@ def _row_insert(pool_leaf, row_leaf, slot):
     return pool_leaf.at[slot].set(row_leaf.reshape(-1)[0].astype(pool_leaf.dtype))
 
 
-class ServingEngine:
+# ===========================================================================
+# Shared stepper core
+# ===========================================================================
+
+
+class _EngineCore:
+    """Request-lifecycle machinery both engines are rebased onto.
+
+    Subclasses implement the mechanics (``_admit``, ``_decode_step``,
+    ``_abort_impl``, ``has_work``, ``pending_requests``); the core owns the
+    public lifecycle: ``submit`` -> ``step``/``run`` -> terminal status,
+    plus ``abort`` and the stats schema.
+    """
+
+    backend: str = "?"
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        self.cfg = cfg
+        self.done: List[Request] = []
+        self.step_count = 0
+        self.step_times: List[float] = []
+        #: tokens ingested as fresh context (full-sequence prefill plus
+        #: prompt tails / fork continuations streamed through decode) --
+        #: copy-on-write forks skip the shared prefix, so this is the
+        #: number the prefix-sharing benches compare
+        self.prefill_tokens = 0
+        self._key = jax.random.PRNGKey(seed)
+
+    # ------------- public lifecycle API -------------
+
+    def submit(self, req: Request):
+        self._validate(req)
+        req.t_submit = time.perf_counter()
+        req.status = "queued"
+        self._enqueue(req)
+
+    def step(self) -> bool:
+        """One event-loop iteration: admit what fits, run one batched decode
+        step if anything is active.  Returns True while work remains, so
+        callers can drive the engine open-loop (`while eng.step(): ...`) and
+        interleave submits/aborts between steps."""
+        raise NotImplementedError
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drain: step until queue + batch are empty; returns terminal
+        requests.  If ``max_steps`` is hit first, still-active/queued
+        requests are surfaced at the end of the returned list (statuses
+        ``running``/``queued``) instead of being silently dropped."""
+        while self.has_work() and self.step_count < max_steps:
+            self.step()
+        if self.has_work():
+            return self.done + self.pending_requests()
+        return self.done
+
+    def abort(self, rid: int) -> bool:
+        """Cancel a request at any lifecycle point: waiting, mid-decode, or
+        spilled.  Frees its slot/pages immediately; the request lands in
+        ``done`` with status ``aborted`` (tokens already streamed remain in
+        ``output``).  Returns False if ``rid`` is unknown or terminal."""
+        return self._abort_impl(rid)
+
+    def has_work(self) -> bool:
+        raise NotImplementedError
+
+    def pending_requests(self) -> List[Request]:
+        """Requests submitted but not yet terminal (running, waiting, or
+        spilled)."""
+        raise NotImplementedError
+
+    def stats(self) -> Dict[str, float]:
+        """Always the full key schema -- zeros before anything finishes."""
+        toks = sum(len(r.output) for r in self.done)
+        by_status = {s: sum(1 for r in self.done if r.status == s)
+                     for s in TERMINAL_STATUSES}
+        pending = self.pending_requests()
+        out: Dict[str, float] = {
+            "tokens": float(toks), "wall_s": 0.0, "tokens_per_s": 0.0,
+            "prefill_tokens": float(self.prefill_tokens),
+            "requests_done": float(by_status["done"]),
+            "requests_aborted": float(by_status["aborted"]),
+            "requests_truncated": float(by_status["truncated"]),
+            "active_requests": float(sum(1 for r in pending
+                                         if r.status == "running")),
+            "queued_requests": float(sum(1 for r in pending
+                                         if r.status == "queued")),
+        }
+        timed = [r for r in self.done if r.t_done > 0]
+        if timed:
+            t0 = min(r.t_submit for r in timed)
+            t1 = max(r.t_done for r in timed)
+            out["wall_s"] = t1 - t0
+            out["tokens_per_s"] = toks / max(t1 - t0, 1e-9)
+        out.update(_percentile_stats(self.done, self.step_times))
+        out.update(self._traffic.stats())
+        return out
+
+    # ------------- subclass hooks -------------
+
+    def _validate(self, req: Request):
+        if req.parent_rid is not None:
+            raise ValueError(
+                f"{type(self).__name__} does not support fork/sessions "
+                "(copy-on-write prefix sharing needs the paged pool)")
+        if req.retain:
+            raise ValueError(
+                f"{type(self).__name__} cannot retain finished requests "
+                "(page refcounts need the paged pool)")
+
+    def _enqueue(self, req: Request):
+        raise NotImplementedError
+
+    def _abort_impl(self, rid: int) -> bool:
+        raise NotImplementedError
+
+    def _finalize(self, req: Request, status: str):
+        req.status = status
+        req.truncated = status == "truncated"
+        req.t_done = time.perf_counter()
+        self.done.append(req)
+
+
+# ===========================================================================
+# Fixed-slot engine
+# ===========================================================================
+
+
+class ServingEngine(_EngineCore):
+    backend = "slots"
+
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
                  mesh_axes=None):
         assert not cfg.encoder_only
+        super().__init__(cfg, seed=ecfg.seed)
         self.params = params
-        self.cfg = cfg
         self.ecfg = ecfg
         self.mesh_axes = mesh_axes
         B = ecfg.slots
@@ -174,11 +336,7 @@ class ServingEngine:
         self.active = np.zeros((B,), bool)
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
-        self.done: List[Request] = []
-        self.step_count = 0
-        self.step_times: List[float] = []
         self._traffic = _OpTrafficMeter(cfg)
-        self._key = jax.random.PRNGKey(0)
 
         # donate the cache tree: the engine drops its reference on return,
         # so XLA appends the token in place instead of copying every cache
@@ -189,31 +347,39 @@ class ServingEngine:
         self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
                                         mesh_axes=mesh_axes))
 
-    # ------------- public API -------------
+    # ------------- lifecycle -------------
 
-    def submit(self, req: Request):
-        req.t_submit = time.perf_counter()
+    def _enqueue(self, req: Request):
         self.queue.append(req)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Run until queue + slots drain; returns finished requests."""
-        while (self.queue or self.active.any()) and self.step_count < max_steps:
-            self._admit()
-            if self.active.any():
-                self._decode_step()
-        return self.done
+    def step(self) -> bool:
+        self._admit()
+        if self.active.any():
+            self._decode_step()
+        return self.has_work()
 
-    def stats(self) -> Dict[str, float]:
-        toks = sum(len(r.output) for r in self.done)
-        if not self.done:
-            return {"tokens": 0}
-        t0 = min(r.t_submit for r in self.done)
-        t1 = max(r.t_done for r in self.done)
-        out = {"tokens": toks, "wall_s": t1 - t0,
-               "tokens_per_s": toks / max(t1 - t0, 1e-9)}
-        out.update(_percentile_stats(self.done, self.step_times))
-        out.update(self._traffic.stats())
-        return out
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active.any())
+
+    def pending_requests(self) -> List[Request]:
+        return ([r for r in self.slot_req if r is not None]
+                + list(self.queue))
+
+    def _abort_impl(self, rid: int) -> bool:
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(i)
+                self._finalize(r, "aborted")
+                return True
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                # free the slot immediately; the stale cache row is simply
+                # overwritten by the next admission
+                self.slot_req[slot] = None
+                self.active[slot] = False
+                self._finalize(r, "aborted")
+                return True
+        return False
 
     # ------------- internals -------------
 
@@ -226,6 +392,7 @@ class ServingEngine:
     def _prefill_into(self, slot: int, req: Request):
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]       # (1, S)
         S = prompt.shape[1]
+        self.prefill_tokens += int(S)
         batch = {"tokens": prompt, "targets": prompt}
         logits, row_caches = self._prefill(self.params, batch=batch)
         # re-capacity the row cache to the pool capacity (explicit time axis)
@@ -245,13 +412,13 @@ class ServingEngine:
         req.output.append(tok)
         hit_eos = req.eos_id is not None and tok == req.eos_id
         if len(req.output) >= req.max_new_tokens or hit_eos:
-            req.t_done = time.perf_counter()
-            self.done.append(req)
+            self._finalize(req, "done")
             return                      # never occupies a decode slot
         self.cur_tokens = self.cur_tokens.at[slot].set(tok)
         self.lengths = self.lengths.at[slot].set(S)
         self.active[slot] = True
         self.slot_req[slot] = req
+        req.status = "running"
         # sync pool cache lengths for this row
         self.caches = _set_row_lengths(self.caches, slot, S)
 
@@ -273,12 +440,14 @@ class ServingEngine:
             req = self.slot_req[slot]
             req.output.append(int(toks_np[slot]))
             hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
+            done = len(req.output) >= req.max_new_tokens or hit_eos
             full = int(lengths_np[slot]) + 1 >= self.ecfg.cache_capacity
-            if len(req.output) >= req.max_new_tokens or hit_eos or full:
-                req.t_done = time.perf_counter()
-                self.done.append(req)
+            if done or full:
                 self.slot_req[slot] = None
                 self.active[slot] = False
+                # a request stopped only by slot capacity was clipped, not
+                # completed -- same contract as the paged pool's truncation
+                self._finalize(req, "done" if done else "truncated")
 
 
 def _set_row_lengths(caches, slot: int, length: int):
@@ -324,14 +493,16 @@ class _Active:
     cur_token: int                    # next token to feed once prompt is done
 
 
-class PagedServingEngine:
+class PagedServingEngine(_EngineCore):
     """Continuous batching over the paged, bank-aware state/KV pool."""
+
+    backend = "paged"
 
     def __init__(self, params, cfg: ModelConfig, pcfg: PagedEngineConfig,
                  mesh_axes=None):
         assert not cfg.encoder_only
+        super().__init__(cfg, seed=pcfg.seed)
         self.params = params
-        self.cfg = cfg
         self.pcfg = pcfg
         self.pool = PagedStatePool(
             cfg, n_pages=None if pcfg.byte_budget is not None else pcfg.n_pages,
@@ -341,86 +512,109 @@ class PagedServingEngine:
         self.active: Dict[int, _Active] = {}
         self.rows: List[Optional[int]] = [None] * pcfg.max_decode_batch
         self.spilled: Dict[int, Tuple[SpilledRequest, List[int], int]] = {}
-        self.done: List[Request] = []
-        self.step_count = 0
-        self.step_times: List[float] = []
+        #: finished-but-pinned requests: fork parents for sessions /
+        #: N-way continuations; release_retained() frees them
+        self.retained: Dict[int, _Active] = {}
         # account the block-table-native ops this engine actually dispatches
         self._traffic = _OpTrafficMeter(cfg, layout="paged")
         self.preemptions = 0
         self._occ: List[float] = []
         self._frag: List[float] = []
         self.last_traffic: Optional[np.ndarray] = None
-        self._key = jax.random.PRNGKey(pcfg.seed)
         self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
                                         mesh_axes=mesh_axes))
         max_chunk_pages = pages_for(pcfg.prefill_chunk)
         assert max_chunk_pages <= self.pool.usable_pages, \
             "prefill_chunk does not fit the page pool"
 
-    # ------------- public API -------------
+    # ------------- lifecycle -------------
 
-    def submit(self, req: Request):
-        req.t_submit = time.perf_counter()
+    def _validate(self, req: Request):
+        if req.parent_rid is not None and req.parent_rid not in self.retained:
+            raise ValueError(
+                f"fork parent {req.parent_rid} is not retained (submit the "
+                "parent with retain=True and let it finish first)")
+
+    def _enqueue(self, req: Request):
         self.sched.push(req)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.sched or self.active) and self.step_count < max_steps:
-            admitted = self._admit()
-            if self.active:
-                self._ensure_headroom()
-            if self.active:
-                self._step()
-            elif not admitted:
-                # queue non-empty but nothing fits and nothing runs:
-                # fail the head loudly rather than spinning
-                req = self.sched.pop()
-                req.truncated = True
-                req.t_done = time.perf_counter()
-                self.done.append(req)
-                self.spilled.pop(req.rid, None)
-        return self.done
+    def step(self) -> bool:
+        admitted = self._admit()
+        if self.active:
+            self._ensure_headroom()
+        if self.active:
+            self._decode_step()
+        elif self.sched and not admitted:
+            # queue non-empty but nothing fits and nothing runs:
+            # fail the head loudly rather than spinning
+            req = self.sched.pop()
+            if req.rid in self.spilled:
+                sp, _, _ = self.spilled.pop(req.rid)
+                self.pool.drop_spilled(sp)
+            self._finalize(req, "truncated")
+        return self.has_work()
 
-    def stats(self) -> Dict[str, float]:
-        toks = sum(len(r.output) for r in self.done)
-        if not self.done:
-            return {"tokens": 0}
-        t0 = min(r.t_submit for r in self.done)
-        t1 = max(r.t_done for r in self.done)
-        out = {"tokens": toks, "wall_s": t1 - t0,
-               "tokens_per_s": toks / max(t1 - t0, 1e-9),
-               "preemptions": float(self.preemptions),
-               "occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
-               "fragmentation": (float(np.mean(self._frag))
-                                 if self._frag else 0.0),
-               # bytes still moved by gather/scatter: spill/resume and
-               # prefill insertion only -- the decode loop contributes zero
-               "gather_bytes": float(self.pool.gather_bytes)}
-        out.update(_percentile_stats(self.done, self.step_times))
-        out.update(self._traffic.stats())
-        return out
+    def has_work(self) -> bool:
+        return bool(self.sched) or bool(self.active)
 
-    def bank_report(self) -> Dict[str, float]:
-        """Score the pool's *actual* page map with the PIM timing model."""
-        from repro.core import pimsim
-        m = self.last_traffic
-        if m is None:
-            m = self.pool.bank_traffic(list(self.active))
-        rep = pimsim.placement_step_latency(m, pimsim.SystemConfig())
-        rep["imbalance"] = self.pool.placement.imbalance()
-        return rep
+    def pending_requests(self) -> List[Request]:
+        return ([a.req for a in self.active.values()]
+                + self.sched.requests())
+
+    def _abort_impl(self, rid: int) -> bool:
+        if rid in self.active:
+            a = self.active.pop(rid)
+            self._free_row(rid)
+            self.pool.release(rid)
+            self._finalize(a.req, "aborted")
+            return True
+        if rid in self.spilled:
+            sp, _, _ = self.spilled.pop(rid)
+            self.pool.drop_spilled(sp)
+            req = self.sched.remove(rid)
+            assert req is not None, "spilled request must be in the heap"
+            self._finalize(req, "aborted")
+            return True
+        req = self.sched.remove(rid)
+        if req is not None:
+            self._finalize(req, "aborted")
+            return True
+        return False
+
+    # ------------- retained parents / copy-on-write fork -------------
+
+    def retained_length(self, rid: int) -> int:
+        return self.retained[rid].length
+
+    def release_retained(self, rid: int):
+        """Drop a retained parent's page references (shared pages free when
+        the last fork drops; must not race a never-admitted fork child).
+        Preempted fork children are fine: their spill blobs already hold
+        their own references on the shared pages."""
+        assert all(r.parent_rid != rid or r.rid in self.spilled
+                   for r in self.sched.requests()), \
+            f"retained {rid} still has unadmitted fork children"
+        self.retained.pop(rid)
+        self.pool.release(rid)
 
     # ------------- admission / preemption -------------
+
+    def _admission_need(self, req: Request) -> int:
+        """Pages admission must find free for ``req`` (plus one slab)."""
+        if req.rid in self.spilled:
+            return self.spilled[req.rid][0].pages_needed
+        if req.parent_rid is not None:
+            # CoW fork: at most the private tail-page copy
+            return 1 if self.retained[req.parent_rid].length % PAGE_TOKENS \
+                else 0
+        s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
+        return pages_for(s0)
 
     def _admit(self) -> bool:
         admitted = False
         while len(self.active) < self.pcfg.max_decode_batch and self.sched:
             head = self.sched.peek()
-            if head.rid in self.spilled:
-                need = self.spilled[head.rid][0].n_pages
-            else:
-                s0 = min(len(head.prompt), self.pcfg.prefill_chunk)
-                need = pages_for(s0)
-            if not self.pool.can_admit(need):
+            if not self.pool.can_admit(self._admission_need(head)):
                 victim = self.sched.choose_victim(
                     [a.req for a in self.active.values()])
                 if victim is not None and self.sched.should_preempt(head,
@@ -431,6 +625,8 @@ class PagedServingEngine:
             req = self.sched.pop()
             if req.rid in self.spilled:
                 self._resume(req)
+            elif req.parent_rid is not None:
+                self._fork_into(req)
             else:
                 self._prefill_into(req)
             admitted = True
@@ -447,6 +643,9 @@ class PagedServingEngine:
         s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
         ok = self.pool.register(req.rid, pages_for(s0))
         assert ok, "admission checked capacity"
+        # the whole prompt is fresh context: s0 through full-sequence
+        # prefill, the tail streamed through the decode batch
+        self.prefill_tokens += len(req.prompt)
         prompt = jnp.asarray(req.prompt[:s0], jnp.int32)[None]
         logits, row_caches = self._prefill(
             self.params, batch={"tokens": prompt, "targets": prompt})
@@ -462,10 +661,28 @@ class PagedServingEngine:
             a.cur_token = tok
         self.active[req.rid] = a
         self._assign_row(req.rid)
+        req.status = "running"
         if req.output and (len(req.output) >= req.max_new_tokens
                            or (req.eos_id is not None
                                and req.output[-1] == req.eos_id)):
             self._finish(req.rid)       # prefill already produced the end
+
+    def _fork_into(self, req: Request):
+        """Admit a copy-on-write fork: share the retained parent's full
+        prefix pages, copy only its partial tail page + slab, and stream
+        the continuation tokens (the parent's final sampled token, then the
+        new turn's tokens) through the decode batch -- no re-prefill of the
+        shared prefix ever happens."""
+        parent = self.retained.get(req.parent_rid)
+        assert parent is not None, f"fork parent {req.parent_rid} released"
+        ok = self.pool.fork(req.parent_rid, req.rid, parent.length)
+        assert ok, "admission checked capacity"
+        pending = [int(parent.cur_token)] + list(map(int, req.prompt))
+        self.prefill_tokens += len(pending)
+        a = _Active(req, length=parent.length, pending=pending, cur_token=-1)
+        self.active[req.rid] = a
+        self._assign_row(req.rid)
+        req.status = "running"
 
     def _resume(self, req: Request):
         sp, pending, cur = self.spilled.pop(req.rid)
@@ -473,6 +690,7 @@ class PagedServingEngine:
         assert ok, "admission checked capacity"
         self.active[req.rid] = _Active(req, sp.length, pending, cur)
         self._assign_row(req.rid)
+        req.status = "running"
 
     def _preempt(self, rid: int):
         """Evict by page spill: state leaves the device bit-exactly and the
@@ -481,16 +699,19 @@ class PagedServingEngine:
         self._free_row(rid)
         sp = self.pool.spill(rid, a.length)
         self.spilled[rid] = (sp, a.pending, a.cur_token)
+        a.req.status = "queued"
         self.sched.push(a.req, resumed=True)
         self.preemptions += 1
 
     def _finish(self, rid: int, truncated: bool = False):
         a = self.active.pop(rid)
         self._free_row(rid)
-        self.pool.release(rid)
-        a.req.truncated = truncated
-        a.req.t_done = time.perf_counter()
-        self.done.append(a.req)
+        if a.req.retain and not truncated:
+            # keep the pages pinned: this request is now a fork parent
+            self.retained[rid] = a
+        else:
+            self.pool.release(rid)
+        self._finalize(a.req, "truncated" if truncated else "done")
 
     def _ensure_headroom(self):
         """Every active request must own the page its next token writes."""
@@ -511,7 +732,7 @@ class PagedServingEngine:
 
     # ------------- the decode step -------------
 
-    def _step(self):
+    def _decode_step(self):
         self.step_count += 1
         B = self.pcfg.max_decode_batch
         tokens = np.zeros((B,), np.int32)
@@ -531,10 +752,20 @@ class PagedServingEngine:
         self.step_times.append(time.perf_counter() - t0)
         # account at the attended length: the step appends one token at
         # `length` and attends over length+1 (matches ServingEngine, which
-        # accounts after its post-step lengths increment)
-        self._traffic.account_step(
-            [lengths[row] + 1 for row, rid in enumerate(self.rows)
-             if rid is not None])
+        # accounts after its post-step lengths increment).  Copy-on-write
+        # shared pages are deduplicated across rows -- a physical page
+        # streamed for several forks of one prefix is attributed once.
+        seen_pages = set()
+        units = []
+        for row, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            npg = pages_for(int(lengths[row]) + 1)
+            fresh = [p for p in self.pool.page_table[rid][:npg]
+                     if p not in seen_pages]
+            seen_pages.update(fresh)
+            units.append(max(len(fresh), 1))
+        self._traffic.account_units(units)
 
         rids = [r for r in self.rows if r is not None]
         self.last_traffic = self.pool.bank_traffic(rids)
@@ -567,3 +798,32 @@ class PagedServingEngine:
                        and req.output[-1] == req.eos_id)
             if len(req.output) >= req.max_new_tokens or hit_eos:
                 self._finish(rid)
+
+    # ------------- stats -------------
+
+    def stats(self) -> Dict[str, float]:
+        out = super().stats()
+        out.update({
+            "preemptions": float(self.preemptions),
+            "occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
+            "fragmentation": (float(np.mean(self._frag))
+                              if self._frag else 0.0),
+            # bytes still moved by gather/scatter: spill/resume, prefill
+            # insertion, and the one-page fork copy -- the decode loop
+            # contributes zero
+            "gather_bytes": float(self.pool.gather_bytes),
+            "pages_allocated": float(self.pool.pages_allocated),
+            "shared_page_hits": float(self.pool.shared_page_hits),
+            "shared_page_savings": float(self.pool.shared_page_savings),
+        })
+        return out
+
+    def bank_report(self) -> Dict[str, float]:
+        """Score the pool's *actual* page map with the PIM timing model."""
+        from repro.core import pimsim
+        m = self.last_traffic
+        if m is None:
+            m = self.pool.bank_traffic(list(self.active))
+        rep = pimsim.placement_step_latency(m, pimsim.SystemConfig())
+        rep["imbalance"] = self.pool.placement.imbalance()
+        return rep

@@ -341,6 +341,34 @@ class CachePaging:
                 out.append(pool[slab])
         return out
 
+    def fork_copy(self, pools: Sequence[jnp.ndarray], src_page: jnp.ndarray,
+                  dst_page: jnp.ndarray, src_slab: jnp.ndarray,
+                  dst_slab: jnp.ndarray) -> List[jnp.ndarray]:
+        """Copy-on-write fork: duplicate one physical page (the parent's
+        partially filled tail -- the only page a forked child may later
+        write inside) and the parent's slab row (recurrent state is mutated
+        every step, so it is never shareable).  Full prefix pages are shared
+        by reference, not touched here."""
+        out = []
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "page":
+                out.append(pool.at[dst_page].set(pool[src_page]))
+            else:
+                out.append(pool.at[dst_slab].set(pool[src_slab]))
+        return out
+
+    def copy_slab(self, pools: Sequence[jnp.ndarray], src_slab: jnp.ndarray,
+                  dst_slab: jnp.ndarray) -> List[jnp.ndarray]:
+        """Fork at an exact page boundary: only the slab row is copied (the
+        child's first append opens a fresh page of its own)."""
+        out = []
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "slab":
+                out.append(pool.at[dst_slab].set(pool[src_slab]))
+            else:
+                out.append(pool)
+        return out
+
     def insert_blob(self, pools: Sequence[jnp.ndarray], blob,
                     page_ids: jnp.ndarray, slab: jnp.ndarray
                     ) -> List[jnp.ndarray]:

@@ -68,6 +68,11 @@ class BankAwarePlacement:
         self._live = np.zeros(
             (self.topo.pseudo_channels, self.topo.bank_pairs), np.int64)
         self._n_free = n_pages - len(self.reserved)
+        # copy-on-write sharing: physical page id -> reference count.  A page
+        # leaves the free list with one reference; forked requests take extra
+        # references on a parent's immutable full pages; the page returns to
+        # the free list only when the last owner drops it.
+        self._refs: Dict[int, int] = {}
 
     # ------------- allocation -------------
 
@@ -90,14 +95,45 @@ class BankAwarePlacement:
             out.append(self._free[best].popleft())
             self._live[best] += 1
         self._n_free -= n
+        for pid in out:
+            self._refs[pid] = 1
         return out
 
-    def free(self, pages: Sequence[int]):
+    def ref(self, pages: Sequence[int]):
+        """Take one extra (copy-on-write) reference on each page."""
         for pid in pages:
+            assert self._refs.get(pid, 0) >= 1, f"ref on free page {pid}"
+            self._refs[pid] += 1
+
+    def refcount(self, pid: int) -> int:
+        return self._refs.get(pid, 0)
+
+    def unref(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; pages whose count hits zero return to
+        the free list.  Returns the page ids actually freed."""
+        freed: List[int] = []
+        for pid in pages:
+            n = self._refs[pid] - 1
+            if n > 0:
+                self._refs[pid] = n
+                continue
+            del self._refs[pid]
             c = self.topo.coord(pid)
             self._free[c].append(pid)
             self._live[c] -= 1
-        self._n_free += len(pages)
+            freed.append(pid)
+        self._n_free += len(freed)
+        return freed
+
+    # back-compat alias: pre-refcount callers freed unconditionally; with
+    # single-owner pages (refcount 1) unref is exactly the old free
+    free = unref
+
+    @property
+    def n_shared_extra(self) -> int:
+        """Extra references beyond one owner per live page -- the number of
+        physical pages copy-on-write sharing is currently saving."""
+        return sum(self._refs.values()) - len(self._refs)
 
     # ------------- accounting -------------
 

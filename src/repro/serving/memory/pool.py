@@ -47,10 +47,25 @@ def bucket_pages(npg: int) -> int:
 
 @dataclasses.dataclass
 class SpilledRequest:
-    """Host-side copy of an evicted request's state (bit-exact)."""
+    """Host-side copy of an evicted request's state (bit-exact).
+
+    Copy-on-write aware: only *privately owned* pages are extracted into
+    ``blob``.  Pages shared with other resident requests never leave the
+    device -- the spilled request keeps its reference on them (recorded in
+    ``shared`` as (block-table position, physical id)), so they cannot be
+    freed or overwritten while it waits, and resume reuses the ids verbatim.
+    A shared page therefore spills zero extra times.
+    """
     blob: List[np.ndarray]
-    n_pages: int
+    n_pages: int                        # total block-table length
     length: int
+    private_idx: List[int] = dataclasses.field(default_factory=list)
+    shared: List[tuple] = dataclasses.field(default_factory=list)
+
+    @property
+    def pages_needed(self) -> int:
+        """Fresh pages a resume must allocate (private pages only)."""
+        return len(self.private_idx)
 
 
 class PagedStatePool:
@@ -110,6 +125,8 @@ class PagedStatePool:
         self._extract = jax.jit(self.paging.extract_request)
         self._insert_blob = jax.jit(self.paging.insert_blob,
                                     donate_argnums=(0,))
+        self._fork_copy = jax.jit(self.paging.fork_copy, donate_argnums=(0,))
+        self._copy_slab = jax.jit(self.paging.copy_slab, donate_argnums=(0,))
 
         # block-table-native op plans (layout="paged"): per-page stream
         # bytes and per-request slab bytes for the PIM bank model come from
@@ -123,8 +140,16 @@ class PagedStatePool:
             if e.kind == "state_update")
         #: host-side ledger of bytes still moved by gather/scatter -- which
         #: after the block-table-native rewire is only preemption
-        #: spill/resume and prefill insertion, never the decode loop
+        #: spill/resume, prefill insertion, and the one-page fork copy --
+        #: never the decode loop
         self.gather_bytes = 0.0
+        #: cumulative pages handed out by the allocator (register / grow /
+        #: resume / the fork tail copy); copy-on-write shares are *not*
+        #: counted here -- the gap versus an unshared run is the savings
+        self.pages_allocated = 0
+        #: cumulative extra references taken by fork() -- each one is a page
+        #: a prefix-sharing-free pool would have had to allocate and fill
+        self.shared_page_hits = 0
 
     # ------------------------------------------------------------------
     # allocation
@@ -155,6 +180,7 @@ class PagedStatePool:
             return False
         self.page_table[rid] = pages
         self.slab_of[rid] = self._free_slabs.pop()
+        self.pages_allocated += n_pages
         return True
 
     def grow(self, rid: int, n_new: int) -> bool:
@@ -163,13 +189,60 @@ class PagedStatePool:
         if pages is None:
             return False
         self.page_table[rid].extend(pages)
+        self.pages_allocated += n_new
         return True
 
     def release(self, rid: int):
-        """Free a request's pages + slab (copy-free: ids return to the free
-        lists; page contents are overwritten on next pin)."""
-        self.placement.free(self.page_table.pop(rid))
+        """Drop a request's references: pages return to the free list only
+        when the last owner drops them (copy-on-write forks keep shared
+        prefix pages alive); the slab is always exclusive and frees now."""
+        self.placement.unref(self.page_table.pop(rid))
         self._free_slabs.append(self.slab_of.pop(rid))
+
+    def fork(self, parent_rid: int, child_rid: int, length: int) -> bool:
+        """Copy-on-write fork: the child shares the parent's full (append-
+        immutable) prefix pages by reference and gets a private copy of only
+        the partially filled tail page plus the parent's slab row (recurrent
+        state at ``length``).  Costs at most 1 page + 1 slab regardless of
+        prefix length -- re-prefill is skipped entirely.
+
+        ``length`` is the parent's cached context length.  The parent may
+        keep running (or stay retained): its own tail stays private to it,
+        and full pages are never written by either side (decode appends only
+        at positions >= length).
+        """
+        assert child_rid not in self.page_table
+        parent_pages = self.page_table[parent_rid]
+        n_full, tail = divmod(length, PAGE_TOKENS)
+        assert len(parent_pages) >= n_full + (1 if tail else 0), \
+            (parent_rid, length, len(parent_pages))
+        need = 1 if tail else 0
+        if not self.can_admit(need):
+            return False
+        new_pages: List[int] = []
+        if tail:
+            got = self.placement.alloc(1)
+            if got is None:
+                return False
+            new_pages = got
+            self.pages_allocated += 1
+        shared = list(parent_pages[:n_full])
+        self.placement.ref(shared)
+        self.shared_page_hits += len(shared)
+        self.page_table[child_rid] = shared + new_pages
+        slab = self._free_slabs.pop()
+        self.slab_of[child_rid] = slab
+        src_slab = jnp.int32(self.slab_of[parent_rid])
+        if tail:
+            self.pools = self._fork_copy(
+                self.pools, jnp.int32(parent_pages[n_full]),
+                jnp.int32(new_pages[0]), src_slab, jnp.int32(slab))
+            self.gather_bytes += self.page_nbytes + self.slab_nbytes
+        else:
+            self.pools = self._copy_slab(self.pools, src_slab,
+                                         jnp.int32(slab))
+            self.gather_bytes += self.slab_nbytes
+        return True
 
     # ------------------------------------------------------------------
     # data movement
@@ -187,25 +260,61 @@ class PagedStatePool:
         self.gather_bytes += self.request_nbytes(len(self.page_table[rid]))
 
     def spill(self, rid: int, length: int) -> SpilledRequest:
-        """Evict: copy pages+slab to host bit-exactly, free the device ids."""
+        """Evict: copy the request's *private* pages + slab to host
+        bit-exactly and free those device ids.  Pages shared with other
+        requests (copy-on-write prefixes, refcount > 1) are not extracted:
+        the spilled request keeps its reference, so the bits stay resident
+        for the co-owners and the page cannot be reallocated underneath the
+        waiting blob -- a shared page never spills twice."""
         pages = self.page_table[rid]
-        blob = self._extract(self.pools, jnp.asarray(pages, jnp.int32),
+        private_idx = [i for i, p in enumerate(pages)
+                       if self.placement.refcount(p) == 1]
+        shared = [(i, p) for i, p in enumerate(pages)
+                  if self.placement.refcount(p) > 1]
+        priv = [pages[i] for i in private_idx]
+        blob = self._extract(self.pools, jnp.asarray(priv, jnp.int32),
                              jnp.int32(self.slab_of[rid]))
         host = [np.asarray(x) for x in blob]
-        self.release(rid)
-        self.gather_bytes += self.request_nbytes(len(pages))
-        return SpilledRequest(host, len(pages), length)
+        # free only the private pages (refcount 1 -> 0) + the slab; shared
+        # refs travel with the SpilledRequest
+        self.page_table.pop(rid)
+        self.placement.unref(priv)
+        self._free_slabs.append(self.slab_of.pop(rid))
+        self.gather_bytes += self.request_nbytes(len(priv))
+        return SpilledRequest(host, len(pages), length,
+                              private_idx=private_idx, shared=shared)
 
     def resume(self, rid: int, sp: SpilledRequest) -> bool:
-        """Re-pin a spilled request onto fresh pages (same bits, possibly a
-        different bank placement)."""
-        if not self.register(rid, sp.n_pages):
+        """Re-pin a spilled request: private pages land on fresh physical
+        ids, shared prefix pages are still resident and rejoin the block
+        table verbatim (same bits, possibly a different bank placement for
+        the private part)."""
+        assert rid not in self.page_table
+        if not self.can_admit(sp.pages_needed):
             return False
-        pages = jnp.asarray(self.page_table[rid], jnp.int32)
-        slab = jnp.int32(self.slab_of[rid])
-        self.pools = self._insert_blob(self.pools, sp.blob, pages, slab)
-        self.gather_bytes += self.request_nbytes(sp.n_pages)
+        fresh = self.placement.alloc(sp.pages_needed)
+        if fresh is None:
+            return False
+        self.pages_allocated += sp.pages_needed
+        table = [0] * sp.n_pages
+        for pos, pid in sp.shared:
+            table[pos] = pid
+        for pos, pid in zip(sp.private_idx, fresh):
+            table[pos] = pid
+        self.page_table[rid] = table
+        slab = self._free_slabs.pop()
+        self.slab_of[rid] = slab
+        self.pools = self._insert_blob(self.pools, sp.blob,
+                                       jnp.asarray(fresh, jnp.int32),
+                                       jnp.int32(slab))
+        self.gather_bytes += self.request_nbytes(sp.pages_needed)
         return True
+
+    def drop_spilled(self, sp: SpilledRequest):
+        """Abort a spilled request: release the references its blob holds on
+        still-resident shared pages (the last owner to drop frees them)."""
+        self.placement.unref([pid for _, pid in sp.shared])
+        sp.shared = []
 
     # ------------------------------------------------------------------
     # the decode step
@@ -287,6 +396,12 @@ class PagedStatePool:
         """Fraction of usable pages currently pinned."""
         used = self.usable_pages - self.free_pages
         return used / max(self.usable_pages, 1)
+
+    @property
+    def shared_page_savings(self) -> int:
+        """Physical pages currently saved by copy-on-write sharing: extra
+        references beyond one owner per live page."""
+        return self.placement.n_shared_extra
 
     def fragmentation(self, lengths: Dict[int, int]) -> float:
         """1 - used_tokens / allocated_token_capacity over resident requests

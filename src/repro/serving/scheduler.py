@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import List, Optional, Tuple
+from typing import List, Optional, Set, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +37,10 @@ class Scheduler:
         self.cfg = cfg
         self._heap: List[Tuple[tuple, int, object]] = []
         self._seq = itertools.count()
+        # aborted rids: removal from a heap is lazy -- tombstoned entries are
+        # skipped by peek/pop and pruned as they surface
+        self._gone: Set[int] = set()
+        self._n_live = 0
 
     def _key(self, req, resumed: bool = False) -> tuple:
         boost = -1 if (resumed and self.cfg.resume_boost) else 0
@@ -50,20 +54,48 @@ class Scheduler:
     # ------------- queue -------------
 
     def push(self, req, resumed: bool = False):
+        # a tombstoned rid still has a stale entry in the heap; re-pushing
+        # it would revive that entry as a duplicate.  Engines never reuse an
+        # aborted rid, so fail loudly rather than corrupt the queue.
+        assert req.rid not in self._gone, f"rid {req.rid} reuse after abort"
         heapq.heappush(self._heap,
                        (self._key(req, resumed), next(self._seq), req))
+        self._n_live += 1
+
+    def _prune(self):
+        while self._heap and self._heap[0][2].rid in self._gone:
+            _, _, req = heapq.heappop(self._heap)
+            self._gone.discard(req.rid)
 
     def peek(self):
+        self._prune()
         return self._heap[0][2] if self._heap else None
 
     def pop(self):
+        self._prune()
+        self._n_live -= 1
         return heapq.heappop(self._heap)[2]
 
+    def remove(self, rid: int):
+        """Abort support: drop a waiting request from the heap.  Returns the
+        removed request, or None if ``rid`` is not queued.  O(n) scan to hand
+        the caller its Request; the heap itself is cleaned lazily."""
+        for _, _, req in self._heap:
+            if req.rid == rid and rid not in self._gone:
+                self._gone.add(rid)
+                self._n_live -= 1
+                return req
+        return None
+
+    def requests(self) -> List[object]:
+        """Live (non-tombstoned) waiting requests, unordered."""
+        return [req for _, _, req in self._heap if req.rid not in self._gone]
+
     def __len__(self) -> int:
-        return len(self._heap)
+        return self._n_live
 
     def __bool__(self) -> bool:
-        return bool(self._heap)
+        return self._n_live > 0
 
     # ------------- preemption policy -------------
 
