@@ -20,6 +20,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--min-ratio", type=float, default=0.8,
                     help="fail if paged tokens/s < ratio * slots4 tokens/s")
+    ap.add_argument("--max-decode-recompiles", type=int, default=1,
+                    help="fail if the paged pool's decode step compiled "
+                         "more than this many times over the run (the "
+                         "workload is shaped for a single decode shape; "
+                         "more means a silent retrace crept in)")
     ap.add_argument("--arch", default="mamba2-2.7b")
     args = ap.parse_args(argv)
 
@@ -58,17 +63,31 @@ def main(argv=None) -> int:
     p_stats = paged.stats()
 
     ratio = p_stats["tokens_per_s"] / max(s_stats["tokens_per_s"], 1e-9)
+    decode_compiles = paged.pool._decode.n_compiles
     print(f"slots4:  {s_stats['tokens']} tokens, "
           f"{s_stats['tokens_per_s']:.2f} tok/s")
     print(f"paged:   {p_stats['tokens']} tokens, "
           f"{p_stats['tokens_per_s']:.2f} tok/s, "
           f"gather_bytes={p_stats['gather_bytes']:.0f}")
     print(f"paged_vs_slots={ratio:.2f} (floor {args.min_ratio})")
+    print(f"paged decode compiles={decode_compiles} "
+          f"(budget {args.max_decode_recompiles}); "
+          f"jit compiles: " + " ".join(
+              f"{k}={v}" for k, v in
+              sorted(paged.obs.recompiles.counts().items())))
+    ok = True
     if ratio < args.min_ratio:
         print("FAIL: paged decode fell below the throughput floor",
               file=sys.stderr)
-        return 1
-    return 0
+        ok = False
+    if decode_compiles > args.max_decode_recompiles:
+        for ev in paged.obs.recompiles.events:
+            if ev.fn == "pool.decode" and not ev.is_warmup:
+                print(f"  retrace: {ev.changed}", file=sys.stderr)
+        print("FAIL: paged decode step retraced beyond the pinned budget",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -251,10 +251,19 @@ def serving_throughput():
         dt = time.perf_counter() - t0
         toks = sum(len(r.output) for r in done)
         stats = eng.stats()
+        # the registry view: histogram summaries (ttft/step/tok-latency
+        # percentiles, step_s split by compile tag) + which jitted fns
+        # compiled how often -- the p99_step_s vs p99_step_nocompile_s gap
+        # is compile stalls, not steady-state decode
+        stats["histograms"] = eng.obs.metrics.summaries()
+        stats["recompile_counts"] = eng.obs.recompiles.counts()
         artifact[f"slots{slots}"] = stats
         emit(f"serving/slots{slots}", dt / max(toks, 1) * 1e6,
              f"tokens_per_s={toks/dt:.2f};requests={len(done)};"
-             f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f}")
+             f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f};"
+             f"p99_step_nocompile_ms="
+             f"{stats['p99_step_nocompile_s']*1e3:.1f};"
+             f"recompiles={stats['recompiles']:.0f}")
     # paged pool: same decode batch and the same mixed prompts; decode runs
     # the block-table-native ops (no per-step gather/scatter)
     eng = PagedServingEngine(params, cfg, PagedEngineConfig(
@@ -267,6 +276,8 @@ def serving_throughput():
     toks = sum(len(r.output) for r in done)
     stats = eng.stats()
     stats["bank_report"] = eng.bank_report()
+    stats["histograms"] = eng.obs.metrics.summaries()
+    stats["recompile_counts"] = eng.obs.recompiles.counts()
     artifact["paged"] = stats
     # the headline of the block-table-native rewire: paged tokens/s vs the
     # fixed-slot pool on the identical workload (was ~0.28x with the
@@ -280,7 +291,10 @@ def serving_throughput():
          f"gather_bytes={stats['gather_bytes']:.0f};"
          f"occupancy={stats['occupancy']:.2f};"
          f"fragmentation={stats['fragmentation']:.2f};"
-         f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f}")
+         f"p99_ttft_ms={stats.get('p99_ttft_s', 0)*1e3:.1f};"
+         f"p99_step_nocompile_ms="
+         f"{stats['p99_step_nocompile_s']*1e3:.1f};"
+         f"recompiles={stats['recompiles']:.0f}")
     _dump_serving_artifact()
 
 

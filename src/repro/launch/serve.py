@@ -71,6 +71,14 @@ def main(argv=None):
     ap.add_argument("--turns", type=int, default=0,
                     help="after the batch: run a --turns-turn chat session "
                          "on copy-on-write prefix sharing (paged only)")
+    # observability
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="write the structured trace at exit: Chrome-trace "
+                         "JSON (open in https://ui.perfetto.dev), or JSONL "
+                         "if OUT ends in .jsonl")
+    ap.add_argument("--metrics", default=None, metavar="OUT",
+                    help="dump the metrics registry in Prometheus text "
+                         "exposition format at exit ('-' for stdout)")
     args = ap.parse_args(argv)
 
     import jax
@@ -168,6 +176,10 @@ def main(argv=None):
           f"{stats['tokens_per_s']:.1f} tok/s "
           f"(wall {time.perf_counter()-t0:.1f}s, state={args.state_format}, "
           f"backend={backend}, pool={pool})")
+    print(f"  steps: p99={stats['p99_step_s']*1e3:.1f}ms "
+          f"p99_nocompile={stats['p99_step_nocompile_s']*1e3:.1f}ms "
+          f"({int(stats['compile_steps'])} compile steps, "
+          f"{int(stats['recompiles'])} jit compiles)")
     traffic = {k.split("/", 1)[1]: v for k, v in stats.items()
                if k.startswith("op_traffic_bytes/")}
     if traffic:
@@ -205,6 +217,22 @@ def main(argv=None):
               f"({eng.stats()['shared_page_hits']:.0f} shared-page hits; "
               "an unshared engine would re-prefill the whole history "
               "every turn)")
+
+    if args.trace:
+        eng.save_trace(args.trace)
+        counts = eng.obs.recompiles.counts()
+        print(f"trace: {len(eng.obs.tracer.events())} events -> "
+              f"{args.trace} (jit compiles: "
+              + (" ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+                 or "none") + ")")
+    if args.metrics:
+        text = eng.prometheus_text()
+        if args.metrics == "-":
+            sys.stdout.write(text)
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(text)
+            print(f"metrics: {args.metrics}")
     return 0
 
 

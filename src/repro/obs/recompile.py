@@ -1,0 +1,163 @@
+"""Recompile watcher: catch every fresh XLA trace/compile of a jitted fn.
+
+The serving step loop is only fast while it reuses one compiled
+executable; shifting batch composition, block-table widths, or donated
+pool shapes silently retrace and turn a ~3ms step into a ~1s one (the
+``p99_step_s`` mystery in the ROADMAP).  ``RecompileWatcher.wrap`` puts a
+thin shim around a ``jax.jit`` callable that:
+
+  * detects each fresh compile by watching the jit cache size grow across
+    the call;
+  * records *which abstract shapes changed* versus the previous compile of
+    the same function -- the leaf-level ``path: (old) -> (new)`` diff of
+    the argument tree (shape/dtype only, computed lazily so steady-state
+    calls pay two integer reads and nothing else);
+  * emits a ``recompile`` instant into the trace buffer and bumps the
+    ``recompiles_total{fn=...}`` counter.
+
+The wrapper forwards attribute access (``_cache_size`` included), so
+existing retrace-pin tests keep working against the wrapped function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["RecompileEvent", "WatchedFunction", "RecompileWatcher"]
+
+#: cap on reported changed-leaf entries per event (params trees are huge;
+#: the churn is invariably in the handful of data arguments)
+MAX_CHANGED = 20
+
+
+def _describe(args: tuple, kwargs: dict) -> Dict[str, str]:
+    """Leaf path -> ``shape:dtype`` for the whole argument tree.
+
+    Donated buffers may already be deleted when this runs (the watcher
+    describes lazily, after the call) -- shape/dtype live on the aval and
+    stay readable; anything unreadable degrades to its type name.
+    """
+    import jax
+    out: Dict[str, str] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path((args, kwargs))
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        try:
+            shape = tuple(getattr(leaf, "shape", ()))
+            dtype = getattr(leaf, "dtype", None)
+            out[key] = (f"{shape}:{dtype}" if dtype is not None
+                        else repr(leaf) if isinstance(leaf, (int, float,
+                                                             bool, str))
+                        else type(leaf).__name__)
+        except Exception:                        # pragma: no cover
+            out[key] = type(leaf).__name__
+    return out
+
+
+def _diff(old: Optional[Dict[str, str]],
+          new: Dict[str, str]) -> List[str]:
+    """Human-readable changed-leaf entries between two signatures."""
+    if old is None:
+        return ["<first compile>"]
+    changed: List[str] = []
+    for k, v in new.items():
+        prev = old.get(k)
+        if prev != v:
+            changed.append(f"{k}: {prev or '<absent>'} -> {v}")
+    for k in old:
+        if k not in new:
+            changed.append(f"{k}: {old[k]} -> <absent>")
+    if len(changed) > MAX_CHANGED:
+        changed = changed[:MAX_CHANGED] + [
+            f"... {len(changed) - MAX_CHANGED} more leaves changed"]
+    return changed or ["<retrace with identical abstract shapes "
+                       "(new static/structure variant)>"]
+
+
+@dataclasses.dataclass
+class RecompileEvent:
+    fn: str
+    n_compiles: int                 # cache size after this compile
+    t: float                        # perf_counter stamp
+    changed: List[str]              # leaf-level shape diff vs prior compile
+    signature: Dict[str, str]       # full abstract signature of this call
+
+    @property
+    def is_warmup(self) -> bool:
+        """The function's very first compile (expected, not a regression)."""
+        return self.n_compiles == 1
+
+
+class WatchedFunction:
+    """Shim around one jitted callable; transparent except for watching."""
+
+    def __init__(self, fn, name: str, watcher: "RecompileWatcher"):
+        self._fn = fn
+        self.name = name
+        self._watcher = watcher
+        self._last_signature: Optional[Dict[str, str]] = None
+
+    @property
+    def n_compiles(self) -> int:
+        """Compiled executables this function accumulated (cache size)."""
+        try:
+            return int(self._fn._cache_size())
+        except Exception:                        # pragma: no cover
+            return 0
+
+    def __call__(self, *args, **kwargs):
+        before = self.n_compiles
+        out = self._fn(*args, **kwargs)
+        after = self.n_compiles
+        if after > before:
+            sig = _describe(args, kwargs)
+            self._watcher._record(self, after, sig)
+            self._last_signature = sig
+        return out
+
+    def __getattr__(self, item):
+        return getattr(self._fn, item)
+
+
+class RecompileWatcher:
+    """All watched functions of one engine share this event log."""
+
+    def __init__(self, tracer=None, metrics=None):
+        self.tracer = tracer
+        self.metrics = metrics
+        self.events: List[RecompileEvent] = []
+
+    def wrap(self, fn, name: str) -> WatchedFunction:
+        return WatchedFunction(fn, name, self)
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @property
+    def n_recompiles(self) -> int:
+        """Compiles beyond each function's expected first (warmup) one."""
+        return sum(1 for e in self.events if not e.is_warmup)
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e.fn] = out.get(e.fn, 0) + 1
+        return out
+
+    def _record(self, wfn: WatchedFunction, n_compiles: int,
+                signature: Dict[str, str]) -> None:
+        ev = RecompileEvent(
+            fn=wfn.name, n_compiles=n_compiles, t=time.perf_counter(),
+            changed=_diff(wfn._last_signature, signature),
+            signature=signature)
+        self.events.append(ev)
+        if self.metrics is not None:
+            self.metrics.counter("recompiles_total", fn=wfn.name).inc()
+        if self.tracer is not None:
+            self.tracer.instant(
+                "recompile", cat="jit", track="jit",
+                ts=self.tracer.ts_of(ev.t), fn=wfn.name,
+                n_compiles=n_compiles, warmup=ev.is_warmup,
+                changed=ev.changed)

@@ -38,6 +38,7 @@ from typing import Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.obs import Observability, RequestRecord
 from repro.serving.engine import (EngineConfig, PagedEngineConfig,
                                   PagedServingEngine, Request, ServingEngine,
                                   TERMINAL_STATUSES)
@@ -170,14 +171,17 @@ class Engine:
     """The one serving facade over both backends."""
 
     def __init__(self, params, cfg: ModelConfig,
-                 scfg: ServeConfig = ServeConfig(), mesh_axes=None):
+                 scfg: ServeConfig = ServeConfig(), mesh_axes=None,
+                 obs: Optional[Observability] = None):
         self.scfg = scfg
+        obs = obs if obs is not None else Observability()
         ecfg = scfg.engine_config()
         if scfg.backend == "slots":
-            self._eng = ServingEngine(params, cfg, ecfg, mesh_axes=mesh_axes)
+            self._eng = ServingEngine(params, cfg, ecfg, mesh_axes=mesh_axes,
+                                      obs=obs)
         else:
             self._eng = PagedServingEngine(params, cfg, ecfg,
-                                           mesh_axes=mesh_axes)
+                                           mesh_axes=mesh_axes, obs=obs)
         self._rids = itertools.count()
 
     # ------------- properties -------------
@@ -190,6 +194,28 @@ class Engine:
     def engine(self):
         """The backing engine (escape hatch: pool, scheduler, bank_report)."""
         return self._eng
+
+    @property
+    def obs(self) -> Observability:
+        """The observability bundle: metrics registry, trace buffer,
+        lifecycle tracker, recompile watcher."""
+        return self._eng.obs
+
+    # ------------- observability -------------
+
+    def save_trace(self, path: str) -> None:
+        """Write the structured trace: Chrome-trace JSON (Perfetto) or
+        JSONL for ``*.jsonl`` paths."""
+        self.obs.save_trace(path)
+
+    def prometheus_text(self) -> str:
+        """The metrics registry in Prometheus text exposition format."""
+        return self.obs.prometheus_text()
+
+    def lifecycle(self, handle) -> Optional["RequestRecord"]:
+        """Per-request span record (queue delay, TTFT, preemption cost)."""
+        rid = handle.rid if isinstance(handle, RequestHandle) else int(handle)
+        return self.obs.lifecycle.record(rid)
 
     # ------------- request lifecycle -------------
 

@@ -38,8 +38,10 @@ import numpy as np
 
 from repro import ops as OPS
 from repro.core import attention_cache as AC
+from repro.core import pimsim
 from repro.core.paged import PAGE_TOKENS, pages_for
 from repro.models import model as M
+from repro.obs import Observability
 from repro.models.config import ModelConfig
 from repro.serving.sampler import SamplingConfig, sample
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -99,9 +101,11 @@ class _OpTrafficMeter:
     shared page is attributed once per step, not once per reader.
     """
 
-    def __init__(self, cfg: ModelConfig, layout: str = "dense"):
+    def __init__(self, cfg: ModelConfig, layout: str = "dense",
+                 metrics=None):
         self.cfg = cfg
         self.layout = layout
+        self.metrics = metrics        # mirror into the obs registry
         self.by_kind: Dict[str, float] = {}
         self._affine = None   # kind -> (bytes at 1 unit, bytes per +1 unit)
 
@@ -128,8 +132,11 @@ class _OpTrafficMeter:
             return
         n, total = len(units), sum(units)
         for kind, (base, slope) in self._coeffs().items():
-            self.by_kind[kind] = (self.by_kind.get(kind, 0.0)
-                                  + n * base + (total - n) * slope)
+            add = n * base + (total - n) * slope
+            self.by_kind[kind] = self.by_kind.get(kind, 0.0) + add
+            if self.metrics is not None:
+                self.metrics.counter("op_traffic_bytes_total",
+                                     kind=kind).inc(add)
 
     def account_step(self, lengths) -> None:
         self.account_units([self._units(L) for L in lengths])
@@ -145,36 +152,6 @@ def _sample_tokens(key, logits, sampling: SamplingConfig):
     batch of logits.  Returns (new_key, tokens (B,) on device)."""
     key, sub = jax.random.split(key)
     return key, sample(logits, sampling, sub)
-
-
-def _percentile_stats(done: List[Request],
-                      step_times: List[float]) -> Dict[str, float]:
-    """TTFT and per-token latency percentiles shared by both engines.
-
-    Always returns the full key schema -- zeros when no request has reached
-    the corresponding milestone -- so downstream consumers
-    (``BENCH_serving.json``, dashboards) never key-error on an idle engine.
-    """
-    out: Dict[str, float] = {
-        "mean_ttft_s": 0.0, "p50_ttft_s": 0.0, "p99_ttft_s": 0.0,
-        "p50_step_s": 0.0, "p99_step_s": 0.0,
-        "p50_tok_latency_s": 0.0, "p99_tok_latency_s": 0.0,
-    }
-    ttfts = [r.t_first - r.t_submit for r in done if r.t_first > 0]
-    if ttfts:
-        out["p50_ttft_s"] = float(np.percentile(ttfts, 50))
-        out["p99_ttft_s"] = float(np.percentile(ttfts, 99))
-        out["mean_ttft_s"] = float(np.mean(ttfts))
-    if step_times:
-        out["p50_step_s"] = float(np.percentile(step_times, 50))
-        out["p99_step_s"] = float(np.percentile(step_times, 99))
-    per_tok = [(r.t_done - r.t_first) / max(len(r.output) - 1, 1)
-               for r in done if r.t_done > 0 and r.t_first > 0
-               and len(r.output) > 1]
-    if per_tok:
-        out["p50_tok_latency_s"] = float(np.percentile(per_tok, 50))
-        out["p99_tok_latency_s"] = float(np.percentile(per_tok, 99))
-    return out
 
 
 def _row_insert(pool_leaf, row_leaf, slot):
@@ -205,15 +182,27 @@ class _EngineCore:
     ``_abort_impl``, ``has_work``, ``pending_requests``); the core owns the
     public lifecycle: ``submit`` -> ``step``/``run`` -> terminal status,
     plus ``abort`` and the stats schema.
+
+    Every engine carries an :class:`repro.obs.Observability` bundle:
+    ``stats()`` is a schema-stable view over its metrics registry, request
+    phase transitions land in its lifecycle tracker, decode steps and
+    per-bank traffic stream into its trace ring buffer, and the jitted
+    steppers are wrapped by its recompile watcher.
     """
 
     backend: str = "?"
 
-    def __init__(self, cfg: ModelConfig, seed: int = 0):
+    def __init__(self, cfg: ModelConfig, seed: int = 0,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
+        self.obs = obs if obs is not None else Observability()
         self.done: List[Request] = []
         self.step_count = 0
         self.step_times: List[float] = []
+        #: parallel to ``step_times``: True where the step paid a fresh
+        #: XLA compile (warmup or retrace), so p99 can be reported with
+        #: and without compilation stalls
+        self.step_compiled: List[bool] = []
         #: tokens ingested as fresh context (full-sequence prefill plus
         #: prompt tails / fork continuations streamed through decode) --
         #: copy-on-write forks skip the shared prefix, so this is the
@@ -227,6 +216,8 @@ class _EngineCore:
         self._validate(req)
         req.t_submit = time.perf_counter()
         req.status = "queued"
+        self.obs.metrics.counter("requests_submitted_total").inc()
+        self.obs.lifecycle.enqueued(req.rid, t=req.t_submit)
         self._enqueue(req)
 
     def step(self) -> bool:
@@ -240,11 +231,19 @@ class _EngineCore:
         """Drain: step until queue + batch are empty; returns terminal
         requests.  If ``max_steps`` is hit first, still-active/queued
         requests are surfaced at the end of the returned list (statuses
-        ``running``/``queued``) instead of being silently dropped."""
+        ``running``/``queued``) instead of being silently dropped; their
+        lifecycle spans are closed with an explicit ``interrupted`` marker
+        so traces never contain dangling spans (a later ``run()`` reopens
+        the span if work resumes)."""
+        for r in self.pending_requests():
+            self.obs.lifecycle.reopen(r.rid)
         while self.has_work() and self.step_count < max_steps:
             self.step()
         if self.has_work():
-            return self.done + self.pending_requests()
+            pending = self.pending_requests()
+            for r in pending:
+                self.obs.lifecycle.interrupt(r.rid)
+            return self.done + pending
         return self.done
 
     def abort(self, rid: int) -> bool:
@@ -263,29 +262,57 @@ class _EngineCore:
         raise NotImplementedError
 
     def stats(self) -> Dict[str, float]:
-        """Always the full key schema -- zeros before anything finishes."""
-        toks = sum(len(r.output) for r in self.done)
-        by_status = {s: sum(1 for r in self.done if r.status == s)
-                     for s in TERMINAL_STATUSES}
+        """Always the full key schema -- zeros before anything finishes.
+
+        The dict is a *view over the obs metrics registry*: counts read
+        the counters the lifecycle hooks incremented, percentiles read the
+        registry histograms (``ttft_s``, ``step_s`` split by compile tag,
+        ``tok_latency_s``).  Step latency is additionally reported with
+        compile steps excluded (``*_step_nocompile_s``) so steady-state
+        latency separates from compilation stalls, and ``recompiles``
+        counts every fresh XLA trace the watcher saw.
+        """
+        m = self.obs.metrics
         pending = self.pending_requests()
+        n_active = sum(1 for r in pending if r.status == "running")
+        n_queued = sum(1 for r in pending if r.status == "queued")
+        m.gauge("active_requests").set(n_active)
+        m.gauge("queued_requests").set(n_queued)
         out: Dict[str, float] = {
-            "tokens": float(toks), "wall_s": 0.0, "tokens_per_s": 0.0,
-            "prefill_tokens": float(self.prefill_tokens),
-            "requests_done": float(by_status["done"]),
-            "requests_aborted": float(by_status["aborted"]),
-            "requests_truncated": float(by_status["truncated"]),
-            "active_requests": float(sum(1 for r in pending
-                                         if r.status == "running")),
-            "queued_requests": float(sum(1 for r in pending
-                                         if r.status == "queued")),
+            "tokens": m.value("tokens_total"),
+            "wall_s": 0.0, "tokens_per_s": 0.0,
+            "prefill_tokens": m.value("prefill_tokens_total"),
+            "requests_done": m.value("requests_total", status="done"),
+            "requests_aborted": m.value("requests_total", status="aborted"),
+            "requests_truncated": m.value("requests_total",
+                                          status="truncated"),
+            "active_requests": float(n_active),
+            "queued_requests": float(n_queued),
         }
         timed = [r for r in self.done if r.t_done > 0]
         if timed:
             t0 = min(r.t_submit for r in timed)
             t1 = max(r.t_done for r in timed)
             out["wall_s"] = t1 - t0
-            out["tokens_per_s"] = toks / max(t1 - t0, 1e-9)
-        out.update(_percentile_stats(self.done, self.step_times))
+            out["tokens_per_s"] = out["tokens"] / max(t1 - t0, 1e-9)
+        ttft = m.histogram("ttft_s")
+        out["mean_ttft_s"] = ttft.mean
+        out["p50_ttft_s"] = ttft.percentile(50)
+        out["p99_ttft_s"] = ttft.percentile(99)
+        steps_all = m.family_samples("step_s")
+        out["p50_step_s"] = (float(np.percentile(steps_all, 50))
+                             if steps_all else 0.0)
+        out["p99_step_s"] = (float(np.percentile(steps_all, 99))
+                             if steps_all else 0.0)
+        steady = m.histogram("step_s", compile="false")
+        out["p50_step_nocompile_s"] = steady.percentile(50)
+        out["p99_step_nocompile_s"] = steady.percentile(99)
+        out["compile_steps"] = float(
+            m.histogram("step_s", compile="true").count)
+        tok = m.histogram("tok_latency_s")
+        out["p50_tok_latency_s"] = tok.percentile(50)
+        out["p99_tok_latency_s"] = tok.percentile(99)
+        out["recompiles"] = float(self.obs.recompiles.n_events)
         out.update(self._traffic.stats())
         return out
 
@@ -312,6 +339,30 @@ class _EngineCore:
         req.truncated = status == "truncated"
         req.t_done = time.perf_counter()
         self.done.append(req)
+        m = self.obs.metrics
+        m.counter("requests_total", status=status).inc()
+        m.counter("tokens_total").inc(len(req.output))
+        self.obs.lifecycle.finish(req.rid, status,
+                                  n_tokens=len(req.output), t=req.t_done)
+
+    def _count_prefill(self, n: int):
+        """Fresh-context tokens ingested (prefill + streamed tails)."""
+        self.prefill_tokens += int(n)
+        self.obs.metrics.counter("prefill_tokens_total").inc(int(n))
+
+    def _record_step(self, t0: float, dt: float, compiled: bool,
+                     batch: int):
+        """Shared per-step bookkeeping: the step-time series with its
+        compile tag, the ``step_s`` histogram split by tag, and the
+        ``decode_step`` X event on the engine track."""
+        self.step_times.append(dt)
+        self.step_compiled.append(compiled)
+        self.obs.metrics.histogram(
+            "step_s", compile="true" if compiled else "false").observe(dt)
+        self.obs.tracer.complete(
+            "decode_step", cat="step", ts=self.obs.tracer.ts_of(t0),
+            dur=dt * 1e6, track="engine", step=self.step_count,
+            batch=batch, compiled=compiled)
 
 
 # ===========================================================================
@@ -323,9 +374,9 @@ class ServingEngine(_EngineCore):
     backend = "slots"
 
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
-                 mesh_axes=None):
+                 mesh_axes=None, obs: Optional[Observability] = None):
         assert not cfg.encoder_only
-        super().__init__(cfg, seed=ecfg.seed)
+        super().__init__(cfg, seed=ecfg.seed, obs=obs)
         self.params = params
         self.ecfg = ecfg
         self.mesh_axes = mesh_axes
@@ -336,16 +387,18 @@ class ServingEngine(_EngineCore):
         self.active = np.zeros((B,), bool)
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
-        self._traffic = _OpTrafficMeter(cfg)
+        self._traffic = _OpTrafficMeter(cfg, metrics=self.obs.metrics)
 
         # donate the cache tree: the engine drops its reference on return,
         # so XLA appends the token in place instead of copying every cache
         # leaf every step (same treatment as the paged pool's donated pools)
-        self._decode = jax.jit(partial(M.decode_step, cfg=cfg,
-                                       mesh_axes=mesh_axes),
-                               donate_argnames=("caches",))
-        self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
-                                        mesh_axes=mesh_axes))
+        self._decode = self.obs.wrap_jit(
+            jax.jit(partial(M.decode_step, cfg=cfg, mesh_axes=mesh_axes),
+                    donate_argnames=("caches",)),
+            "engine.decode")
+        self._prefill = self.obs.wrap_jit(
+            jax.jit(partial(M.prefill, cfg=cfg, mesh_axes=mesh_axes)),
+            "engine.prefill")
 
     # ------------- lifecycle -------------
 
@@ -390,9 +443,11 @@ class ServingEngine(_EngineCore):
             self._prefill_into(slot, req)
 
     def _prefill_into(self, slot: int, req: Request):
+        t_p0 = time.perf_counter()
+        self.obs.lifecycle.phase(req.rid, "prefill", t=t_p0)
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]       # (1, S)
         S = prompt.shape[1]
-        self.prefill_tokens += int(S)
+        self._count_prefill(S)
         batch = {"tokens": prompt, "targets": prompt}
         logits, row_caches = self._prefill(self.params, batch=batch)
         # re-capacity the row cache to the pool capacity (explicit time axis)
@@ -409,6 +464,11 @@ class ServingEngine(_EngineCore):
         self._key, toks = _sample_tokens(self._key, logits, self.ecfg.sampling)
         tok = int(toks[0])
         req.t_first = time.perf_counter()
+        self.obs.lifecycle.first_token(req.rid, t=req.t_first)
+        self.obs.tracer.complete(
+            "prefill", cat="prefill", ts=self.obs.tracer.ts_of(t_p0),
+            dur=(req.t_first - t_p0) * 1e6, track="engine",
+            rid=req.rid, tokens=int(S))
         req.output.append(tok)
         hit_eos = req.eos_id is not None and tok == req.eos_id
         if len(req.output) >= req.max_new_tokens or hit_eos:
@@ -419,11 +479,13 @@ class ServingEngine(_EngineCore):
         self.active[slot] = True
         self.slot_req[slot] = req
         req.status = "running"
+        self.obs.lifecycle.phase(req.rid, "decode")
         # sync pool cache lengths for this row
         self.caches = _set_row_lengths(self.caches, slot, S)
 
     def _decode_step(self):
         self.step_count += 1
+        c0 = self.obs.recompiles.n_events
         t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, tokens=self.cur_tokens, caches=self.caches,
@@ -434,7 +496,9 @@ class ServingEngine(_EngineCore):
         toks_np = np.asarray(toks)
         # one host sync for the whole step, not one per slot
         lengths_np = np.asarray(self.lengths)
-        self.step_times.append(time.perf_counter() - t0)
+        self._record_step(t0, time.perf_counter() - t0,
+                          compiled=self.obs.recompiles.n_events > c0,
+                          batch=int(self.active.sum()))
         self._traffic.account_step(lengths_np[self.active])
         for slot in np.flatnonzero(self.active):
             req = self.slot_req[slot]
@@ -499,16 +563,18 @@ class PagedServingEngine(_EngineCore):
     backend = "paged"
 
     def __init__(self, params, cfg: ModelConfig, pcfg: PagedEngineConfig,
-                 mesh_axes=None):
+                 mesh_axes=None, obs: Optional[Observability] = None):
         assert not cfg.encoder_only
-        super().__init__(cfg, seed=pcfg.seed)
+        super().__init__(cfg, seed=pcfg.seed, obs=obs)
         self.params = params
         self.pcfg = pcfg
         self.pool = PagedStatePool(
             cfg, n_pages=None if pcfg.byte_budget is not None else pcfg.n_pages,
             n_slabs=pcfg.n_slabs, byte_budget=pcfg.byte_budget,
             mesh_axes=mesh_axes)
+        self.pool.attach_obs(self.obs)
         self.sched = Scheduler(pcfg.scheduler)
+        self.sched.obs = self.obs
         self.active: Dict[int, _Active] = {}
         self.rows: List[Optional[int]] = [None] * pcfg.max_decode_batch
         self.spilled: Dict[int, Tuple[SpilledRequest, List[int], int]] = {}
@@ -516,13 +582,15 @@ class PagedServingEngine(_EngineCore):
         #: N-way continuations; release_retained() frees them
         self.retained: Dict[int, _Active] = {}
         # account the block-table-native ops this engine actually dispatches
-        self._traffic = _OpTrafficMeter(cfg, layout="paged")
+        self._traffic = _OpTrafficMeter(cfg, layout="paged",
+                                        metrics=self.obs.metrics)
         self.preemptions = 0
         self._occ: List[float] = []
         self._frag: List[float] = []
         self.last_traffic: Optional[np.ndarray] = None
-        self._prefill = jax.jit(partial(M.prefill, cfg=cfg,
-                                        mesh_axes=mesh_axes))
+        self._prefill = self.obs.wrap_jit(
+            jax.jit(partial(M.prefill, cfg=cfg, mesh_axes=mesh_axes)),
+            "engine.prefill")
         max_chunk_pages = pages_for(pcfg.prefill_chunk)
         assert max_chunk_pages <= self.pool.usable_pages, \
             "prefill_chunk does not fit the page pool"
@@ -640,16 +708,22 @@ class PagedServingEngine(_EngineCore):
         self.rows[self.rows.index(rid)] = None
 
     def _prefill_into(self, req: Request):
+        t_p0 = time.perf_counter()
+        self.obs.lifecycle.phase(req.rid, "prefill", t=t_p0)
         s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
         ok = self.pool.register(req.rid, pages_for(s0))
         assert ok, "admission checked capacity"
         # the whole prompt is fresh context: s0 through full-sequence
         # prefill, the tail streamed through the decode batch
-        self.prefill_tokens += len(req.prompt)
+        self._count_prefill(len(req.prompt))
         prompt = jnp.asarray(req.prompt[:s0], jnp.int32)[None]
         logits, row_caches = self._prefill(
             self.params, batch={"tokens": prompt, "targets": prompt})
         self.pool.insert_prefill(req.rid, row_caches)
+        self.obs.tracer.complete(
+            "prefill", cat="prefill", ts=self.obs.tracer.ts_of(t_p0),
+            dur=(time.perf_counter() - t_p0) * 1e6, track="engine",
+            rid=req.rid, tokens=s0, chunked=bool(len(req.prompt) > s0))
         a = _Active(req, length=s0, pending=list(map(int, req.prompt[s0:])),
                     cur_token=-1)
         if not a.pending:
@@ -657,11 +731,13 @@ class PagedServingEngine(_EngineCore):
                                              self.pcfg.sampling)
             tok = int(toks[0])
             req.t_first = time.perf_counter()
+            self.obs.lifecycle.first_token(req.rid, t=req.t_first)
             req.output.append(tok)
             a.cur_token = tok
         self.active[req.rid] = a
         self._assign_row(req.rid)
         req.status = "running"
+        self.obs.lifecycle.phase(req.rid, "decode")
         if req.output and (len(req.output) >= req.max_new_tokens
                            or (req.eos_id is not None
                                and req.output[-1] == req.eos_id)):
@@ -678,11 +754,12 @@ class PagedServingEngine(_EngineCore):
         ok = self.pool.fork(req.parent_rid, req.rid, parent.length)
         assert ok, "admission checked capacity"
         pending = [int(parent.cur_token)] + list(map(int, req.prompt))
-        self.prefill_tokens += len(pending)
+        self._count_prefill(len(pending))
         a = _Active(req, length=parent.length, pending=pending, cur_token=-1)
         self.active[req.rid] = a
         self._assign_row(req.rid)
         req.status = "running"
+        self.obs.lifecycle.phase(req.rid, "decode")
 
     def _resume(self, req: Request):
         sp, pending, cur = self.spilled.pop(req.rid)
@@ -691,6 +768,7 @@ class PagedServingEngine(_EngineCore):
         self.active[req.rid] = _Active(req, sp.length, pending, cur)
         self._assign_row(req.rid)
         req.status = "running"
+        self.obs.lifecycle.phase(req.rid, "decode")
 
     def _preempt(self, rid: int):
         """Evict by page spill: state leaves the device bit-exactly and the
@@ -700,6 +778,8 @@ class PagedServingEngine(_EngineCore):
         sp = self.pool.spill(rid, a.length)
         self.spilled[rid] = (sp, a.pending, a.cur_token)
         a.req.status = "queued"
+        self.obs.lifecycle.phase(rid, "spilled")
+        self.obs.metrics.counter("preemptions_total").inc()
         self.sched.push(a.req, resumed=True)
         self.preemptions += 1
 
@@ -743,13 +823,16 @@ class PagedServingEngine(_EngineCore):
             a = self.active[rid]
             tokens[row] = a.pending[0] if a.pending else a.cur_token
             lengths[row] = a.length
+        c0 = self.obs.recompiles.n_events
         t0 = time.perf_counter()
         logits = self.pool.decode(self.params, self.rows, tokens, lengths,
                                   seed=self.step_count)
         self._key, toks = _sample_tokens(self._key, logits,
                                          self.pcfg.sampling)
         toks_np = np.asarray(toks)
-        self.step_times.append(time.perf_counter() - t0)
+        self._record_step(t0, time.perf_counter() - t0,
+                          compiled=self.obs.recompiles.n_events > c0,
+                          batch=sum(1 for r in self.rows if r is not None))
         # account at the attended length: the step appends one token at
         # `length` and attends over length+1 (matches ServingEngine, which
         # accounts after its post-step lengths increment).  Copy-on-write
@@ -772,6 +855,11 @@ class PagedServingEngine(_EngineCore):
         self._occ.append(self.pool.occupancy())
         self._frag.append(self.pool.fragmentation(
             {r: self.active[r].length for r in rids}))
+        self.obs.tracer.counter(
+            "bank_traffic", pimsim.bank_trace_counters(self.last_traffic))
+        self.obs.tracer.counter(
+            "pool", {"occupancy": self._occ[-1],
+                     "fragmentation": self._frag[-1]})
 
         for row, rid in enumerate(self.rows):
             if rid is None:
@@ -787,6 +875,7 @@ class PagedServingEngine(_EngineCore):
                 # the first-generation distribution
                 tok = int(toks_np[row])
                 a.req.t_first = time.perf_counter()
+                self.obs.lifecycle.first_token(rid, t=a.req.t_first)
                 a.req.output.append(tok)
                 a.cur_token = tok
             else:

@@ -73,6 +73,11 @@ class BankAwarePlacement:
         # references on a parent's immutable full pages; the page returns to
         # the free list only when the last owner drops it.
         self._refs: Dict[int, int] = {}
+        #: optional repro.obs MetricsRegistry -- when attached (via
+        #: ``PagedStatePool.attach_obs``) alloc/free/ref mirror into
+        #: ``pages_alloc_total`` / ``pages_freed_total`` /
+        #: ``page_refs_total`` counters and the ``pages_live`` gauge
+        self.metrics = None
 
     # ------------- allocation -------------
 
@@ -97,6 +102,9 @@ class BankAwarePlacement:
         self._n_free -= n
         for pid in out:
             self._refs[pid] = 1
+        if self.metrics is not None:
+            self.metrics.counter("pages_alloc_total").inc(n)
+            self.metrics.gauge("pages_live").set(self.n_usable - self._n_free)
         return out
 
     def ref(self, pages: Sequence[int]):
@@ -104,6 +112,8 @@ class BankAwarePlacement:
         for pid in pages:
             assert self._refs.get(pid, 0) >= 1, f"ref on free page {pid}"
             self._refs[pid] += 1
+        if self.metrics is not None:
+            self.metrics.counter("page_refs_total").inc(len(pages))
 
     def refcount(self, pid: int) -> int:
         return self._refs.get(pid, 0)
@@ -123,6 +133,9 @@ class BankAwarePlacement:
             self._live[c] -= 1
             freed.append(pid)
         self._n_free += len(freed)
+        if self.metrics is not None and freed:
+            self.metrics.counter("pages_freed_total").inc(len(freed))
+            self.metrics.gauge("pages_live").set(self.n_usable - self._n_free)
         return freed
 
     # back-compat alias: pre-refcount callers freed unconditionally; with

@@ -150,6 +150,38 @@ class PagedStatePool:
         #: cumulative extra references taken by fork() -- each one is a page
         #: a prefix-sharing-free pool would have had to allocate and fill
         self.shared_page_hits = 0
+        #: optional repro.obs.Observability (see ``attach_obs``)
+        self._obs = None
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    def attach_obs(self, obs) -> None:
+        """Attach an engine's :class:`repro.obs.Observability` bundle: the
+        jitted pool steppers get recompile watchers, the placement mirrors
+        page alloc/free/ref into the metrics registry, and page movement
+        (register / grow / fork / spill / resume / release) emits instants
+        on the pool track."""
+        self._obs = obs
+        self._decode = obs.wrap_jit(self._decode, "pool.decode")
+        self._decode_gather = obs.wrap_jit(self._decode_gather,
+                                           "pool.decode_gather")
+        self._insert = obs.wrap_jit(self._insert, "pool.prefill_insert")
+        self._insert_blob = obs.wrap_jit(self._insert_blob,
+                                         "pool.resume_insert")
+        self.placement.metrics = obs.metrics
+
+    def _instant(self, name: str, **args) -> None:
+        if self._obs is not None:
+            self._obs.tracer.instant(name, cat="pool", track="pool", **args)
+
+    def _account_gather(self, nbytes: float) -> None:
+        """Bytes moved by gather/scatter (spill/resume/prefill-insert/fork
+        copies): the host ledger plus the metrics counter."""
+        self.gather_bytes += nbytes
+        if self._obs is not None:
+            self._obs.metrics.counter("gather_bytes_total").inc(nbytes)
 
     # ------------------------------------------------------------------
     # allocation
@@ -181,6 +213,7 @@ class PagedStatePool:
         self.page_table[rid] = pages
         self.slab_of[rid] = self._free_slabs.pop()
         self.pages_allocated += n_pages
+        self._instant("pool.register", rid=rid, pages=n_pages)
         return True
 
     def grow(self, rid: int, n_new: int) -> bool:
@@ -190,14 +223,17 @@ class PagedStatePool:
             return False
         self.page_table[rid].extend(pages)
         self.pages_allocated += n_new
+        self._instant("pool.grow", rid=rid, pages=n_new)
         return True
 
     def release(self, rid: int):
         """Drop a request's references: pages return to the free list only
         when the last owner drops them (copy-on-write forks keep shared
         prefix pages alive); the slab is always exclusive and frees now."""
-        self.placement.unref(self.page_table.pop(rid))
+        pages = self.page_table.pop(rid)
+        self.placement.unref(pages)
         self._free_slabs.append(self.slab_of.pop(rid))
+        self._instant("pool.release", rid=rid, pages=len(pages))
 
     def fork(self, parent_rid: int, child_rid: int, length: int) -> bool:
         """Copy-on-write fork: the child shares the parent's full (append-
@@ -237,11 +273,17 @@ class PagedStatePool:
             self.pools = self._fork_copy(
                 self.pools, jnp.int32(parent_pages[n_full]),
                 jnp.int32(new_pages[0]), src_slab, jnp.int32(slab))
-            self.gather_bytes += self.page_nbytes + self.slab_nbytes
+            self._account_gather(self.page_nbytes + self.slab_nbytes)
         else:
             self.pools = self._copy_slab(self.pools, src_slab,
                                          jnp.int32(slab))
-            self.gather_bytes += self.slab_nbytes
+            self._account_gather(self.slab_nbytes)
+        self._instant("pool.fork", parent=parent_rid, child=child_rid,
+                      shared_pages=len(shared), copied_pages=len(new_pages))
+        if self._obs is not None:
+            self._obs.metrics.counter("forks_total").inc()
+            self._obs.metrics.counter(
+                "shared_page_refs_total").inc(len(shared))
         return True
 
     # ------------------------------------------------------------------
@@ -257,7 +299,7 @@ class PagedStatePool:
         pages = jnp.asarray(self.page_table[rid], jnp.int32)
         slab = jnp.int32(self.slab_of[rid])
         self.pools = self._insert(self.pools, row_caches, pages, slab)
-        self.gather_bytes += self.request_nbytes(len(self.page_table[rid]))
+        self._account_gather(self.request_nbytes(len(self.page_table[rid])))
 
     def spill(self, rid: int, length: int) -> SpilledRequest:
         """Evict: copy the request's *private* pages + slab to host
@@ -280,7 +322,9 @@ class PagedStatePool:
         self.page_table.pop(rid)
         self.placement.unref(priv)
         self._free_slabs.append(self.slab_of.pop(rid))
-        self.gather_bytes += self.request_nbytes(len(priv))
+        self._account_gather(self.request_nbytes(len(priv)))
+        self._instant("pool.spill", rid=rid, private_pages=len(priv),
+                      shared_pages=len(shared))
         return SpilledRequest(host, len(pages), length,
                               private_idx=private_idx, shared=shared)
 
@@ -307,7 +351,9 @@ class PagedStatePool:
         self.pools = self._insert_blob(self.pools, sp.blob,
                                        jnp.asarray(fresh, jnp.int32),
                                        jnp.int32(slab))
-        self.gather_bytes += self.request_nbytes(sp.pages_needed)
+        self._account_gather(self.request_nbytes(sp.pages_needed))
+        self._instant("pool.resume", rid=rid, pages=sp.pages_needed,
+                      shared_pages=len(sp.shared))
         return True
 
     def drop_spilled(self, sp: SpilledRequest):

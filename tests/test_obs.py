@@ -1,0 +1,334 @@
+"""Observability subsystem: registry semantics, span lifecycle ordering,
+Chrome-trace export validity, recompile watcher, engine integration."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.state_update import StateQuantConfig
+from repro.models import model as M
+from repro.obs import (Observability, MetricsRegistry, TraceBuffer,
+                       LifecycleTracker, RecompileWatcher, PHASES,
+                       validate_chrome_trace, trace_features)
+from repro.obs.metrics import Histogram
+from repro.serving.api import Engine, ServeConfig
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_semantics():
+    m = MetricsRegistry()
+    m.counter("reqs").inc()
+    m.counter("reqs").inc(2.5)
+    assert m.value("reqs") == 3.5
+    with pytest.raises(ValueError):
+        m.counter("reqs").inc(-1)
+    g = m.gauge("active")
+    g.set(4)
+    g.dec()
+    assert m.value("active") == 3.0
+    # untouched metrics read 0.0, never KeyError (schema stability)
+    assert m.value("never_written") == 0.0
+    assert m.value("reqs", ) == 3.5
+
+
+def test_labels_partition_families():
+    m = MetricsRegistry()
+    m.counter("requests_total", status="done").inc(3)
+    m.counter("requests_total", status="aborted").inc()
+    assert m.value("requests_total", status="done") == 3.0
+    assert m.value("requests_total", status="aborted") == 1.0
+    assert m.value("requests_total", status="truncated") == 0.0
+    # kind / label-set mismatches are bugs, not silent new families
+    with pytest.raises(ValueError):
+        m.gauge("requests_total", status="done")
+    with pytest.raises(ValueError):
+        m.counter("requests_total", other="x")
+
+
+def test_histogram_exact_then_bounded():
+    h = Histogram(cap=8)
+    xs = [3.0, 1.0, 2.0, 5.0, 4.0]
+    for x in xs:
+        h.observe(x)
+    assert h.count == 5 and h.sum == 15.0 and h.mean == 3.0
+    # below the cap the percentile is exact np.percentile of everything
+    assert h.percentile(50) == float(np.percentile(xs, 50))
+    assert h.percentile(99) == float(np.percentile(xs, 99))
+    for x in range(100):
+        h.observe(float(x))
+    assert h.count == 105            # count/sum stay exact
+    assert len(h.samples) < 8        # reservoir stays bounded
+    s = h.summary()
+    assert set(s) == {"count", "sum", "mean", "p50", "p90", "p99", "max"}
+
+
+def test_empty_histogram_reads_zero():
+    m = MetricsRegistry()
+    h = m.histogram("step_s", compile="false")
+    assert h.percentile(99) == 0.0 and h.mean == 0.0
+    assert m.family_samples("step_s") == []
+    assert m.family_count("nope") == 0.0
+
+
+def test_prometheus_text_renders_all_kinds():
+    m = MetricsRegistry()
+    m.counter("toks").inc(7)
+    m.gauge("live", pool="a").set(2)
+    m.histogram("lat_s").observe(0.5)
+    text = m.prometheus_text()
+    assert "# TYPE toks counter" in text
+    assert "toks 7" in text
+    assert 'live{pool="a"} 2' in text
+    assert "# TYPE lat_s summary" in text
+    assert 'lat_s{quantile="0.99"} 0.5' in text
+    assert "lat_s_count 1" in text
+
+
+# ---------------------------------------------------------------------------
+# trace buffer
+# ---------------------------------------------------------------------------
+
+def test_trace_ring_keeps_metadata_and_counts_drops():
+    tr = TraceBuffer(capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}", cat="x")
+    assert tr.dropped == 6
+    evs = tr.events()
+    # thread_name metadata survives ring eviction
+    assert any(e["ph"] == "M" for e in evs)
+    obj = tr.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    assert obj["otherData"]["dropped_events"] == 6
+
+
+def test_trace_export_chrome_and_jsonl(tmp_path):
+    tr = TraceBuffer()
+    tr.complete("step", cat="step", ts=tr.now_us(), dur=100.0, batch=2)
+    tr.counter("bank_traffic", {"pch00_bursts": 3.0})
+    tr.async_span("decode", 7, "request", 0.0, 50.0, rid=7)
+    p_json, p_jsonl = tmp_path / "t.json", tmp_path / "t.jsonl"
+    tr.save(str(p_json))
+    tr.save(str(p_jsonl))
+    obj = json.loads(p_json.read_text())
+    assert validate_chrome_trace(obj) == []
+    feats = trace_features(obj)
+    assert {"steps", "spans", "bank"} <= feats
+    lines = [json.loads(L) for L in p_jsonl.read_text().splitlines()]
+    assert len(lines) == len(tr.events())
+
+
+def test_schema_catches_invalid_traces():
+    assert validate_chrome_trace([]) == ["top level must be an object"]
+    assert validate_chrome_trace({}) == ["missing traceEvents list"]
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "no_dur", "pid": 1, "tid": 0, "ts": 0.0},
+        {"ph": "b", "name": "open", "cat": "request", "id": "1",
+         "pid": 1, "tid": 0, "ts": 0.0},            # never closed
+        {"ph": "?", "name": "junk", "pid": 1, "tid": 0, "ts": 0.0},
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert any("dur" in e for e in errs)
+    assert any("dangling" in e for e in errs)
+    assert any("unknown phase" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle spans
+# ---------------------------------------------------------------------------
+
+def test_span_chain_complete_and_derived_metrics():
+    tr = TraceBuffer()
+    m = MetricsRegistry()
+    lc = LifecycleTracker(tr, m)
+    lc.enqueued(1, t=10.0)
+    lc.phase(1, "prefill", t=12.0)
+    lc.phase(1, "decode", t=13.0)
+    lc.phase(1, "spilled", t=14.0)
+    lc.phase(1, "decode", t=16.5)
+    lc.first_token(1, t=13.5)
+    lc.finish(1, "done", n_tokens=5, t=20.0)
+    rec = lc.record(1)
+    assert rec.complete_chain()
+    assert rec.phase_sequence() == ["queued", "prefill", "decode",
+                                    "spilled", "decode"]
+    assert rec.queue_delay_s == 2.0
+    assert rec.ttft_s == 3.5
+    assert rec.preemption_cost_s == 2.5
+    assert rec.tpot_s == pytest.approx((20.0 - 13.5) / 4)
+    # duplicate phase transition is a no-op, not a new span
+    lc2 = LifecycleTracker()
+    lc2.enqueued(2, t=0.0)
+    lc2.phase(2, "decode", t=1.0)
+    lc2.phase(2, "decode", t=2.0)
+    assert len(lc2.record(2).spans) == 2
+
+
+def test_interrupt_closes_span_without_terminal_status():
+    lc = LifecycleTracker(TraceBuffer(), MetricsRegistry())
+    lc.enqueued(3, t=0.0)
+    lc.phase(3, "decode", t=1.0)
+    lc.interrupt(3, t=2.0)
+    rec = lc.record(3)
+    assert not rec.terminal and rec.interrupted
+    assert rec.spans[-1].closed and rec.spans[-1].interrupted
+    assert lc.open_spans() == []
+    # work resumes: a fresh span opens, and finishing completes the chain
+    lc.phase(3, "decode", t=3.0)
+    lc.finish(3, "done", n_tokens=2, t=4.0)
+    assert lc.record(3).complete_chain()
+
+
+def test_phases_vocabulary_enforced():
+    lc = LifecycleTracker()
+    lc.enqueued(1)
+    with pytest.raises(AssertionError):
+        lc.phase(1, "warp_drive")
+    assert set(PHASES) == {"queued", "prefill", "decode", "spilled"}
+
+
+# ---------------------------------------------------------------------------
+# recompile watcher
+# ---------------------------------------------------------------------------
+
+def test_recompile_watcher_detects_shape_change():
+    obs = Observability()
+    fn = obs.wrap_jit(jax.jit(lambda x: x * 2), "f")
+    fn(np.ones((4,), np.float32))
+    assert fn.n_compiles == 1
+    assert obs.recompiles.n_events == 1
+    assert obs.recompiles.events[0].is_warmup
+    fn(np.ones((4,), np.float32))          # cache hit: no new event
+    assert obs.recompiles.n_events == 1
+    fn(np.ones((8,), np.float32))          # fresh abstract shape
+    assert fn.n_compiles == 2
+    ev = obs.recompiles.events[-1]
+    assert not ev.is_warmup
+    assert any("(4,)" in c and "(8,)" in c for c in ev.changed)
+    assert obs.recompiles.n_recompiles == 1
+    assert obs.recompiles.counts() == {"f": 2}
+    # the trace carries the signature (the CI --require recompile_signature)
+    obj = obs.tracer.to_chrome()
+    assert "recompile_signature" in trace_features(obj)
+    # metrics mirror
+    assert obs.metrics.value("recompiles_total", fn="f") == 2.0
+
+
+def test_watched_function_is_transparent():
+    obs = Observability()
+    jitted = jax.jit(lambda x: x + 1)
+    fn = obs.wrap_jit(jitted, "g")
+    out = fn(jnp_ones := np.ones((2,), np.float32))
+    np.testing.assert_allclose(np.asarray(out), jnp_ones + 1)
+    # attribute passthrough keeps the retrace-pin idiom working
+    assert fn._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# engine integration (both backends)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_fp32():
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _mk(params, cfg, backend):
+    return Engine(params, cfg, ServeConfig(backend=backend, batch=2,
+                                           cache_capacity=128, n_pages=9,
+                                           n_slabs=5))
+
+
+@pytest.mark.parametrize("backend", ["slots", "paged"])
+def test_engine_trace_valid_and_chains_complete(tiny_fp32, backend):
+    params, cfg = tiny_fp32
+    eng = _mk(params, cfg, backend)
+    rng = np.random.default_rng(0)
+    hs = [eng.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                     max_new_tokens=3) for _ in range(3)]
+    eng.run()
+    obj = eng.obs.tracer.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    feats = trace_features(obj)
+    assert {"steps", "spans", "recompile"} <= feats
+    if backend == "paged":
+        assert "bank" in feats
+    # every terminal request has a complete queued->terminal chain
+    recs = eng.obs.lifecycle.terminal_records()
+    assert len(recs) == 3
+    for r in recs:
+        assert r.complete_chain()
+        assert r.phase_sequence()[0] == "queued"
+    assert eng.obs.lifecycle.open_spans() == []
+    # per-request record is reachable through the facade
+    rec = eng.lifecycle(hs[0])
+    assert rec is not None and rec.ttft_s > 0
+
+
+def test_stats_is_registry_view(tiny_fp32):
+    params, cfg = tiny_fp32
+    eng = _mk(params, cfg, "slots")
+    rng = np.random.default_rng(1)
+    eng.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+               max_new_tokens=4)
+    eng.run()
+    st = eng.stats()
+    m = eng.obs.metrics
+    assert st["tokens"] == m.value("tokens_total")
+    assert st["requests_done"] == m.value("requests_total", status="done")
+    assert st["prefill_tokens"] == m.value("prefill_tokens_total")
+    assert st["compile_steps"] + \
+        m.histogram("step_s", compile="false").count \
+        == m.family_count("step_s")
+    assert st["recompiles"] >= 1.0
+    # compile-tagged steps are excluded from the nocompile percentile
+    assert st["p99_step_nocompile_s"] <= st["p99_step_s"]
+
+
+def test_run_max_steps_interrupts_spans(tiny_fp32):
+    """The run(max_steps) bugfix: surfaced still-active requests get their
+    open span closed with an explicit interrupted marker -- the exported
+    trace has no dangling async spans."""
+    params, cfg = tiny_fp32
+    eng = _mk(params, cfg, "paged")
+    rng = np.random.default_rng(2)
+    hs = [eng.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                     max_new_tokens=64) for _ in range(2)]
+    out = eng.run(max_steps=2)
+    live = [r for r in out if r.status not in ("done", "aborted",
+                                               "truncated")]
+    assert live, "workload must still be active at max_steps"
+    assert eng.obs.lifecycle.open_spans() == []
+    for r in live:
+        rec = eng.obs.lifecycle.record(r.rid)
+        assert rec.interrupted and rec.spans[-1].interrupted
+    assert validate_chrome_trace(eng.obs.tracer.to_chrome()) == []
+    # resuming reopens a span in the interrupted phase; chains complete
+    eng.run()
+    for h in hs:
+        rec = eng.obs.lifecycle.record(h.rid)
+        assert rec.complete_chain()
+    for r in live:
+        seq = eng.obs.lifecycle.record(r.rid).phase_sequence()
+        assert seq.count("decode") >= 2
+
+
+def test_prometheus_endpoint_smoke(tiny_fp32):
+    params, cfg = tiny_fp32
+    eng = _mk(params, cfg, "paged")
+    rng = np.random.default_rng(3)
+    eng.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+               max_new_tokens=2)
+    eng.run()
+    text = eng.prometheus_text()
+    assert "# TYPE requests_total counter" in text
+    assert "# TYPE step_s summary" in text
+    assert "pages_alloc_total" in text

@@ -182,6 +182,37 @@ def test_slotted_engine_donation_no_retrace():
     assert eng._decode._cache_size() == 1, "decode retraced"
 
 
+def test_paged_engine_decode_no_retrace():
+    """The paged engine's retrace pin, mirroring the slotted one: a
+    constant-shape workload (equal-length prompts in one page bucket, the
+    full decode batch, same shape as benchmarks/paged_smoke.py) must be
+    served by exactly one compiled decode executable.  The recompile
+    watcher must agree with the jit cache, and tag only warmup compiles."""
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=4, n_pages=9, n_slabs=9, prefill_chunk=128))
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 12
+                                               ).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 4 and all(len(r.output) == 4 for r in done)
+    assert eng.pool._decode.n_compiles == 1, "paged decode retraced"
+    assert eng.obs.recompiles.counts().get("pool.decode", 0) == 1
+    assert eng.obs.recompiles.n_recompiles == 0, \
+        [e.changed for e in eng.obs.recompiles.events if not e.is_warmup]
+    # the step series separates the one compile step from steady state
+    stats = eng.stats()
+    assert stats["compile_steps"] >= 1.0
+    assert stats["recompiles"] == float(len(eng.obs.recompiles.events))
+    assert sum(eng.step_compiled) == int(stats["compile_steps"])
+
+
 def test_paged_engine_gather_bytes_only_at_the_edges():
     """Steady-state decode moves zero gather/scatter bytes: the ledger grows
     only at prefill insertion (and spill/resume), never per decode step."""
