@@ -1,7 +1,7 @@
-"""16-token shared-prefix smoke (CI tier 2).
+"""Shared-prefix smoke (CI tier 2).
 
-One 130-token prompt, four copy-on-write forked continuations of four
-tokens each (16 generated tokens total).  Fails if:
+Default mode -- explicit copy-on-write forks: one 130-token prompt, four
+forked continuations of four tokens each.  Fails if:
 
   * the forked path re-prefills the shared prompt (prefill-token ledger
     must show the prompt ingested exactly once, plus one fed parent token
@@ -11,7 +11,25 @@ tokens each (16 generated tokens total).  Fails if:
   * a forked continuation diverges from the unshared re-prefill reference
     (greedy, fp32 -- tokens must match bit-for-bit).
 
+``--cross-request`` mode -- the radix prefix store: N *independent*
+requests sharing a 128-token system prompt (no Session, no fork()).
+Fails if:
+
+  * the store saves zero pages (``prefix_hits`` / ``shared_page_hits``
+    must be > 0 -- the refcount ledger, not a fork counter), or
+  * prefill work is not strictly below the no-store baseline, or
+  * any output diverges from the no-store re-prefill reference, or
+  * a *cold* store hit (every node demoted to the host tier first) is not
+    bit-exact or moves zero promote bytes, or
+  * (with ``--max-decode-recompiles N``) the tiered pool added decode
+    retraces.
+
+``--trace PATH`` saves the cross-request run's Chrome trace; it carries
+the ``tiered`` schema feature (``python -m repro.obs.schema PATH
+--require tiered``).
+
     PYTHONPATH=src python benchmarks/prefix_smoke.py
+    PYTHONPATH=src python benchmarks/prefix_smoke.py --cross-request
 """
 from __future__ import annotations
 
@@ -19,26 +37,9 @@ import argparse
 import sys
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--forks", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=4)
-    args = ap.parse_args(argv)
-
-    import jax
-    import numpy as np
-    from repro.configs import get_smoke_config
-    from repro.core.state_update import StateQuantConfig
-    from repro.models import model as M
-    from repro.serving.api import Engine, ServeConfig
-
-    cfg = get_smoke_config(args.arch).with_(
-        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
-                                     backend="jnp"))
-    params = M.init_model(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompt = rng.integers(0, cfg.vocab_size, 130).astype(np.int32)
+def _fork_mode(args, params, cfg, Engine, ServeConfig, np) -> int:
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, 130).astype(np.int32)
     scfg = ServeConfig(backend="paged", batch=4, n_pages=17, n_slabs=11)
 
     # forked: prefix prefilled once, N CoW continuations
@@ -91,6 +92,133 @@ def main(argv=None) -> int:
               f"tokens and {st_i['pages_allocated'] - st['pages_allocated']:.0f} "
               "pages saved")
     return 0 if ok else 1
+
+
+def _cross_request_mode(args, params, cfg, Engine, ServeConfig, np) -> int:
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(0, cfg.vocab_size, 128).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+             for _ in range(args.forks)]
+    prompts = [np.concatenate([sysp, t]) for t in tails]
+    mk = lambda **kw: ServeConfig(backend="paged", batch=2, n_pages=17,
+                                  n_slabs=7, **kw)
+
+    # no-store baseline: every request re-prefills the system prompt
+    eng_b = Engine(params, cfg, mk())
+    refs = [eng_b.submit(p, max_new_tokens=args.max_new) for p in prompts]
+    eng_b.run()
+    st_b = eng_b.stats()
+
+    # prefix store on: request 0 prefills, the rest adopt its pages
+    eng = Engine(params, cfg, mk(prefix_cache=True, prefix_store_pages=8))
+    hs = [eng.submit(p, max_new_tokens=args.max_new) for p in prompts]
+    eng.run()
+    st = eng.stats()
+
+    print(f"store:    prefill_tokens={st['prefill_tokens']:.0f}, "
+          f"prefix_hits={st['prefix_hits']:.0f}, "
+          f"shared_hits={st['shared_page_hits']:.0f}, "
+          f"savings={st['shared_page_savings']:.0f}")
+    print(f"baseline: prefill_tokens={st_b['prefill_tokens']:.0f}")
+
+    ok = True
+    if st["prefix_hits"] <= 0 or st["shared_page_hits"] <= 0:
+        print("FAIL: independent requests sharing a 128-token system "
+              "prompt saved zero pages", file=sys.stderr)
+        ok = False
+    if st["shared_page_savings"] <= 0:
+        print("FAIL: refcount ledger reports zero shared-page savings",
+              file=sys.stderr)
+        ok = False
+    if not st["prefill_tokens"] < st_b["prefill_tokens"]:
+        print("FAIL: prefix store did not reduce prefill tokens "
+              f"({st['prefill_tokens']:.0f} vs {st_b['prefill_tokens']:.0f})",
+              file=sys.stderr)
+        ok = False
+    for h, r in zip(hs, refs):
+        if h.output != r.output:
+            print(f"FAIL: prefix-hit request {h.rid} diverged from full "
+                  f"re-prefill: {h.output} != {r.output}", file=sys.stderr)
+            ok = False
+
+    # cold-store hit: demote every stored page to the host tier, then a
+    # fresh request must promote them back and still match the baseline
+    pool = eng.engine.pool
+    demoted = pool.demote_all()
+    tail = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    cold_prompt = np.concatenate([sysp, tail])
+    ref = eng_b.submit(cold_prompt, max_new_tokens=args.max_new)
+    eng_b.run()
+    hit = eng.submit(cold_prompt, max_new_tokens=args.max_new)
+    eng.run()
+    st2 = eng.stats()
+    print(f"cold:     demoted={demoted}, prefix_hits={st2['prefix_hits']:.0f}, "
+          f"promote_bytes={st2['promote_bytes']:.0f}")
+    if demoted <= 0:
+        print("FAIL: nothing to demote -- store held no resident pages",
+              file=sys.stderr)
+        ok = False
+    if st2["prefix_hits"] <= st["prefix_hits"]:
+        print("FAIL: cold store produced no prefix hit", file=sys.stderr)
+        ok = False
+    if hit.output != ref.output:
+        print(f"FAIL: cold-store hit diverged from full re-prefill: "
+              f"{hit.output} != {ref.output}", file=sys.stderr)
+        ok = False
+    if pool.page_nbytes > 0 and st2["promote_bytes"] <= 0:
+        # attention-free archs have zero page bytes; skip the byte check
+        print("FAIL: cold hit moved zero bytes host->device",
+              file=sys.stderr)
+        ok = False
+
+    if args.max_decode_recompiles is not None:
+        n = eng.obs.recompiles.counts().get("pool.decode", 0)
+        print(f"decode recompiles: {n} (budget {args.max_decode_recompiles})")
+        if n > args.max_decode_recompiles:
+            print(f"FAIL: {n} decode retraces > budget "
+                  f"{args.max_decode_recompiles}", file=sys.stderr)
+            ok = False
+
+    if args.trace:
+        eng.save_trace(args.trace)
+        print(f"trace saved to {args.trace}")
+
+    if ok:
+        print(f"OK: {args.forks} independent requests shared the system "
+              f"prompt ({st_b['prefill_tokens'] - st['prefill_tokens']:.0f} "
+              "prefill tokens saved), cold-store hit bit-exact")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--forks", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--cross-request", action="store_true",
+                    help="radix prefix store over N independent requests "
+                         "(no explicit forks)")
+    ap.add_argument("--trace", default=None,
+                    help="save the cross-request run's Chrome trace here")
+    ap.add_argument("--max-decode-recompiles", type=int, default=None,
+                    help="fail if pool.decode retraced more than this")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.state_update import StateQuantConfig
+    from repro.models import model as M
+    from repro.serving.api import Engine, ServeConfig
+
+    cfg = get_smoke_config(args.arch).with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+
+    if args.cross_request:
+        return _cross_request_mode(args, params, cfg, Engine, ServeConfig, np)
+    return _fork_mode(args, params, cfg, Engine, ServeConfig, np)
 
 
 if __name__ == "__main__":

@@ -16,6 +16,13 @@ Design constraints, in order:
     ad-hoc lists bit-for-bit until the first decimation;
   * **schema-stable** -- a metric read before any write reports 0.0, so
     views built over the registry never key-error on an idle engine.
+
+Well-known families (beyond the engine/pool basics): the tiered pool
+(:mod:`repro.serving.memory.tiered`) emits ``tier_hit_total`` /
+``tier_miss_total`` (label ``kind``: prefetch / prefix / resume),
+``promote_bytes_total`` / ``demote_bytes_total`` (host<->device traffic),
+and the ``host_tier_bytes`` gauge; read a whole family with
+:meth:`MetricsRegistry.family_total`.
 """
 from __future__ import annotations
 
@@ -182,6 +189,14 @@ class MetricsRegistry:
         for child in fam[2].values():
             out.extend(child._samples)
         return out
+
+    def family_total(self, name: str) -> float:
+        """Summed value across all children of a counter/gauge family --
+        e.g. ``tier_hit_total`` over every ``kind=...`` label."""
+        fam = self._families.get(name)
+        if fam is None or fam[0] == "histogram":
+            return 0.0
+        return float(sum(c.value for c in fam[2].values()))
 
     def family_count(self, name: str) -> float:
         fam = self._families.get(name)

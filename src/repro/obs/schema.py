@@ -32,6 +32,8 @@ FEATURES = {
     "recompile": "recompile instant events (cat='jit')",
     "recompile_signature": "a recompile event carrying a changed-shape "
                            "signature",
+    "tiered": "host-tier events: prefetch b/e spans (cat='prefetch') or "
+              "tier promote/demote/hit instants (cat='tier')",
 }
 
 
@@ -112,6 +114,9 @@ def trace_features(obj) -> Set[str]:
             feats.add("steps")
         if ph in ("b", "e") and cat == "request":
             feats.add("spans")
+        if (ph in ("b", "e") and cat == "prefetch") or \
+                (ph in ("i", "I") and cat == "tier"):
+            feats.add("tiered")
         if ph == "C" and "bank" in str(ev.get("name", "")):
             feats.add("bank")
         if ph in ("i", "I") and cat == "jit":

@@ -14,7 +14,13 @@ Event vocabulary (Trace Event Format phase codes):
   * ``X`` complete events -- decode steps (``cat="step"``), with duration;
   * ``b``/``e`` async pairs -- request lifecycle phase spans
     (``cat="request"``, ``id=rid``): queued / prefill / decode / spilled;
-  * ``i`` instants -- admissions, evictions, forks, recompiles;
+    and host-tier prefetches (``cat="prefetch"``, ``id=rid``): dispatch of
+    a spilled blob's device copy through its commit/cancel.  Prefetch pairs
+    are emitted *closed* at commit time with the recorded dispatch
+    timestamp (``async_span``), so an uncommitted prefetch can never leave
+    a dangling ``b`` in the trace;
+  * ``i`` instants -- admissions, evictions, forks, recompiles; tier
+    movement (``cat="tier"``): promote / demote / prefix_hit / evict;
   * ``C`` counters -- per-bank traffic + ``conflict_factor`` each step.
 
 Tracks (Perfetto rows) are logical: engine, scheduler, pool, requests.

@@ -18,7 +18,14 @@ serving front-end:
     parent's full prefix pages and copies only the partial tail page, so N
     sampled continuations of one prompt or the next turn of a chat skip
     re-prefilling the shared context entirely.  ``Session`` wraps that into
-    multi-turn chat.
+    multi-turn chat;
+  * ``ServeConfig(prefix_cache=True)`` (paged backend) makes that sharing
+    *automatic and cross-request*: a radix prefix store remembers every
+    full prompt page served, and any later ``submit()`` whose prompt shares
+    the prefix adopts the stored pages -- no explicit ``fork()``.  Stored
+    pages outlive their request under ``prefix_store_pages`` (LRU), can be
+    demoted to a ``host_tier_bytes``-budgeted host tier, and come back via
+    scheduler-lookahead async prefetch (see ``serving/memory/tiered``).
 
     eng = Engine(params, cfg, ServeConfig(backend="paged"))
     h = eng.submit(prompt, max_new_tokens=32)
@@ -67,11 +74,21 @@ class ServeConfig:
     sampling: SamplingConfig = SamplingConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     seed: int = 0
+    # --- tiered memory hierarchy (paged backend only) ---
+    prefix_cache: bool = False         # radix prefix store: requests that
+                                       # share a prompt prefix with earlier
+                                       # requests adopt its pages, no fork()
+    prefix_store_pages: int = 64       # store capacity in pages (LRU)
+    host_tier_bytes: Optional[int] = None  # host DRAM budget (None = off)
+    prefetch_window: int = 2           # lookahead prefetch depth
 
     def __post_init__(self):
         if self.backend not in ("paged", "slots"):
             raise ValueError(f"backend must be 'paged' or 'slots', "
                              f"got {self.backend!r}")
+        if self.backend == "slots" and self.prefix_cache:
+            raise ValueError("prefix_cache needs the paged backend "
+                             "(page refcounts / block tables)")
 
     def engine_config(self):
         """The backend-specific config this ServeConfig lowers to."""
@@ -88,7 +105,11 @@ class ServeConfig:
             prefill_chunk=self.prefill_chunk,
             sampling=self.sampling,
             scheduler=self.scheduler,
-            seed=self.seed)
+            seed=self.seed,
+            prefix_cache=self.prefix_cache,
+            prefix_store_pages=self.prefix_store_pages,
+            host_tier_bytes=self.host_tier_bytes,
+            prefetch_window=self.prefetch_window)
 
 
 class RequestHandle:

@@ -532,8 +532,8 @@ def _set_row_lengths(caches, slot: int, length: int):
 # Paged engine
 # ===========================================================================
 
-from repro.serving.memory import (PagedStatePool,  # noqa: E402
-                                  SpilledRequest)
+from repro.serving.memory import (PagedStatePool,  # noqa: E402,F401
+                                  SpilledRequest, TieredStatePool)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -547,6 +547,13 @@ class PagedEngineConfig:
     sampling: SamplingConfig = SamplingConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     seed: int = 0
+    # --- tiered memory hierarchy (serving/memory/tiered) ---
+    prefix_cache: bool = False        # radix prefix store: automatic
+                                      # cross-request CoW prefix sharing
+    prefix_store_pages: int = 64      # store capacity (LRU-evicted)
+    host_tier_bytes: Optional[int] = None  # host tier budget (None = unmetered)
+    prefetch_window: int = 2          # scheduler lookahead for async
+                                      # spill-resume / prefix prefetch
 
 
 @dataclasses.dataclass
@@ -568,10 +575,12 @@ class PagedServingEngine(_EngineCore):
         super().__init__(cfg, seed=pcfg.seed, obs=obs)
         self.params = params
         self.pcfg = pcfg
-        self.pool = PagedStatePool(
+        self.pool = TieredStatePool(
             cfg, n_pages=None if pcfg.byte_budget is not None else pcfg.n_pages,
             n_slabs=pcfg.n_slabs, byte_budget=pcfg.byte_budget,
-            mesh_axes=mesh_axes)
+            mesh_axes=mesh_axes, host_tier_bytes=pcfg.host_tier_bytes,
+            prefix_cache=pcfg.prefix_cache,
+            prefix_store_pages=pcfg.prefix_store_pages)
         self.pool.attach_obs(self.obs)
         self.sched = Scheduler(pcfg.scheduler)
         self.sched.obs = self.obs
@@ -611,6 +620,10 @@ class PagedServingEngine(_EngineCore):
         if self.active:
             self._ensure_headroom()
         if self.active:
+            # stage prefetches *before* dispatching decode: the host->device
+            # copies ride JAX's async dispatch behind the decode kernels, so
+            # the next admission window's data lands while this step runs
+            self._issue_prefetches()
             self._decode_step()
         elif self.sched and not admitted:
             # queue non-empty but nothing fits and nothing runs:
@@ -618,7 +631,8 @@ class PagedServingEngine(_EngineCore):
             req = self.sched.pop()
             if req.rid in self.spilled:
                 sp, _, _ = self.spilled.pop(req.rid)
-                self.pool.drop_spilled(sp)
+                self.pool.prefetch_cancel(req.rid)
+                self.pool.drop_spilled(sp, req.rid)
             self._finalize(req, "truncated")
         return self.has_work()
 
@@ -638,7 +652,8 @@ class PagedServingEngine(_EngineCore):
             return True
         if rid in self.spilled:
             sp, _, _ = self.spilled.pop(rid)
-            self.pool.drop_spilled(sp)
+            self.pool.prefetch_cancel(rid)
+            self.pool.drop_spilled(sp, rid)
             req = self.sched.remove(rid)
             assert req is not None, "spilled request must be in the heap"
             self._finalize(req, "aborted")
@@ -670,11 +685,18 @@ class PagedServingEngine(_EngineCore):
     def _admission_need(self, req: Request) -> int:
         """Pages admission must find free for ``req`` (plus one slab)."""
         if req.rid in self.spilled:
+            if self.pool.prefetch_ready(req.rid):
+                return 0            # staged: commit is O(1) bookkeeping
             return self.spilled[req.rid][0].pages_needed
         if req.parent_rid is not None:
             # CoW fork: at most the private tail-page copy
             return 1 if self.retained[req.parent_rid].length % PAGE_TOKENS \
                 else 0
+        nodes = self.pool.prefix_match(req.prompt)
+        if nodes:
+            # prefix hit: promote any demoted nodes + one page of headroom
+            # for the first streamed tail token
+            return sum(1 for n in nodes if not n.resident) + 1
         s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
         return pages_for(s0)
 
@@ -682,7 +704,12 @@ class PagedServingEngine(_EngineCore):
         admitted = False
         while len(self.active) < self.pcfg.max_decode_batch and self.sched:
             head = self.sched.peek()
-            if not self.pool.can_admit(self._admission_need(head)):
+            need = self._admission_need(head)
+            if not self.pool.can_admit(need):
+                # first try reclaiming device pages from the prefix store
+                # (demote LRU nodes to host) before preempting live work
+                self.pool.reclaim(need)
+            if not self.pool.can_admit(need):
                 victim = self.sched.choose_victim(
                     [a.req for a in self.active.values()])
                 if victim is not None and self.sched.should_preempt(head,
@@ -708,6 +735,11 @@ class PagedServingEngine(_EngineCore):
         self.rows[self.rows.index(rid)] = None
 
     def _prefill_into(self, req: Request):
+        nodes = self.pool.prefix_match(req.prompt)
+        if nodes and self.pool.prefix_admit(req.rid, nodes):
+            self._prefix_hit_into(req, nodes)
+            return
+        self.pool.note_prefix_miss()
         t_p0 = time.perf_counter()
         self.obs.lifecycle.phase(req.rid, "prefill", t=t_p0)
         s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
@@ -720,6 +752,10 @@ class PagedServingEngine(_EngineCore):
         logits, row_caches = self._prefill(
             self.params, batch={"tokens": prompt, "targets": prompt})
         self.pool.insert_prefill(req.rid, row_caches)
+        if s0 % PAGE_TOKENS == 0:
+            # the prefilled pages are full and immutable: remember them in
+            # the prefix store for future requests sharing this prompt
+            self.pool.store_insert(req.rid, req.prompt[:s0])
         self.obs.tracer.complete(
             "prefill", cat="prefill", ts=self.obs.tracer.ts_of(t_p0),
             dur=(time.perf_counter() - t_p0) * 1e6, track="engine",
@@ -742,6 +778,42 @@ class PagedServingEngine(_EngineCore):
                            or (req.eos_id is not None
                                and req.output[-1] == req.eos_id)):
             self._finish(req.rid)       # prefill already produced the end
+
+    def _prefix_hit_into(self, req: Request, nodes) -> None:
+        """Admit a request whose prompt prefix came out of the radix store:
+        the stored pages joined its block table by reference inside
+        ``prefix_admit`` (no prefill compute for them), the tail node's
+        recurrent-state snapshot seeded its slab, and only the *un-cached*
+        prompt tail streams through the decode batch -- the cross-request
+        twin of ``_fork_into``."""
+        j = len(nodes)
+        length = j * PAGE_TOKENS
+        self.obs.lifecycle.phase(req.rid, "prefill")
+        pending = list(map(int, req.prompt[length:]))
+        assert pending, "prefix match must leave a prompt tail"
+        # only the un-cached tail is fresh context -- that is the whole point
+        self._count_prefill(len(pending))
+        a = _Active(req, length=length, pending=pending, cur_token=-1)
+        self.active[req.rid] = a
+        self._assign_row(req.rid)
+        req.status = "running"
+        self.obs.lifecycle.phase(req.rid, "decode")
+
+    def _issue_prefetches(self) -> None:
+        """Scheduler-lookahead prefetch: for requests in the next admission
+        window, dispatch spilled-blob copies into staging pages and promote
+        demoted prefix-store nodes *now*, so the copies overlap the decode
+        step dispatched right after and their eventual admission is O(1)."""
+        window = self.pcfg.prefetch_window
+        if window <= 0:
+            return
+        reserve = max(1, len(self.active))
+        for req in self.sched.lookahead(window):
+            if req.rid in self.spilled:
+                self.pool.prefetch_begin(req.rid, self.spilled[req.rid][0],
+                                         reserve=reserve)
+            elif req.parent_rid is None:
+                self.pool.prefetch_prefix(req.prompt)
 
     def _fork_into(self, req: Request):
         """Admit a copy-on-write fork: share the retained parent's full
@@ -866,6 +938,13 @@ class PagedServingEngine(_EngineCore):
                 continue
             a = self.active[rid]
             a.length += 1
+            if (a.req.parent_rid is None
+                    and a.length % PAGE_TOKENS == 0
+                    and a.length <= len(a.req.prompt)):
+                # a chunk-streamed prompt just filled a page: the page is
+                # immutable from here on and the slab holds the recurrent
+                # state at this exact boundary -- store both
+                self.pool.store_insert(rid, a.req.prompt[:a.length])
             if a.pending:
                 fed = a.pending.pop(0)
                 a.cur_token = fed
@@ -903,7 +982,24 @@ class PagedServingEngine(_EngineCore):
             "gather_bytes": float(self.pool.gather_bytes),
             "pages_allocated": float(self.pool.pages_allocated),
             "shared_page_hits": float(self.pool.shared_page_hits),
-            "shared_page_savings": float(self.pool.shared_page_savings),
+            # peak, not instantaneous: sharing savings survive request
+            # release in end-of-run stats (the live value is also exposed)
+            "shared_page_savings": float(self.pool.shared_savings_peak),
+            "shared_page_savings_live": float(self.pool.shared_page_savings),
+            # --- tiered memory hierarchy ---
+            "prefix_hits": float(self.pool.prefix_hits),
+            "prefix_hit_pages": float(self.pool.prefix_hit_pages),
+            "prefix_hit_tokens": float(self.pool.prefix_hit_tokens),
+            "prefix_store_pages": float(
+                self.pool.store.n_pages if self.pool.store else 0),
+            "prefetch_commits": float(self.pool.prefetch_commits),
+            "tier_hits": self.obs.metrics.family_total("tier_hit_total"),
+            "tier_misses": self.obs.metrics.family_total("tier_miss_total"),
+            "promote_bytes": self.obs.metrics.family_total(
+                "promote_bytes_total"),
+            "demote_bytes": self.obs.metrics.family_total(
+                "demote_bytes_total"),
+            "host_bytes": float(self.pool.host.bytes_used),
         })
         return out
 

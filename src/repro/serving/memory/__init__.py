@@ -3,9 +3,12 @@ from repro.serving.memory.layout import PAGE_TOKENS, CachePaging, LeafSpec
 from repro.serving.memory.placement import BankAwarePlacement, BankTopology
 from repro.serving.memory.pool import (PagedStatePool, SpilledRequest,
                                        bucket_pages, pages_for)
+from repro.serving.memory.prefix_store import PrefixStore, StoredPage
+from repro.serving.memory.tiered import HostTier, TieredStatePool
 
 __all__ = [
     "PAGE_TOKENS", "CachePaging", "LeafSpec",
     "BankAwarePlacement", "BankTopology",
     "PagedStatePool", "SpilledRequest", "bucket_pages", "pages_for",
+    "PrefixStore", "StoredPage", "HostTier", "TieredStatePool",
 ]

@@ -383,6 +383,53 @@ class CachePaging:
                 out.append(pool.at[slab].set(jnp.asarray(vals)))
         return out
 
+    def extract_pages(self, pools: Sequence[jnp.ndarray],
+                      page_ids: jnp.ndarray) -> List[jnp.ndarray]:
+        """Pull bare pages out of the page pools (no slab row) -- the unit of
+        host-tier demotion for prefix-store nodes.  Returns one
+        (npg, 128, *rest) array per *page* spec, in spec order."""
+        out = []
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "page":
+                out.append(self._extract_pages_leaf(pool, page_ids, spec))
+        return out
+
+    def insert_pages(self, pools: Sequence[jnp.ndarray], blob,
+                     page_ids: jnp.ndarray) -> List[jnp.ndarray]:
+        """Re-pin bare pages (inverse of :meth:`extract_pages`); slab pools
+        pass through untouched."""
+        out = []
+        it = iter(blob)
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "page":
+                out.append(self._insert_pages_leaf(pool, jnp.asarray(next(it)),
+                                                   page_ids, spec))
+            else:
+                out.append(pool)
+        return out
+
+    def extract_slab(self, pools: Sequence[jnp.ndarray],
+                     slab: jnp.ndarray) -> List[jnp.ndarray]:
+        """Pull one slab row per *slab* spec (a recurrent-state snapshot)."""
+        out = []
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "slab":
+                out.append(pool[slab])
+        return out
+
+    def insert_slab(self, pools: Sequence[jnp.ndarray], blob,
+                    slab: jnp.ndarray) -> List[jnp.ndarray]:
+        """Write a snapshot back into one slab row (inverse of
+        :meth:`extract_slab`); page pools pass through untouched."""
+        out = []
+        it = iter(blob)
+        for pool, spec in zip(pools, self.specs):
+            if spec.kind == "slab":
+                out.append(pool.at[slab].set(jnp.asarray(next(it))))
+            else:
+                out.append(pool)
+        return out
+
     # ------------------------------------------------------------------
     # block-table-native views (the steady-state decode path)
     # ------------------------------------------------------------------

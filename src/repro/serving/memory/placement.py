@@ -73,6 +73,7 @@ class BankAwarePlacement:
         # references on a parent's immutable full pages; the page returns to
         # the free list only when the last owner drops it.
         self._refs: Dict[int, int] = {}
+        self._extra_peak = 0
         #: optional repro.obs MetricsRegistry -- when attached (via
         #: ``PagedStatePool.attach_obs``) alloc/free/ref mirror into
         #: ``pages_alloc_total`` / ``pages_freed_total`` /
@@ -112,6 +113,7 @@ class BankAwarePlacement:
         for pid in pages:
             assert self._refs.get(pid, 0) >= 1, f"ref on free page {pid}"
             self._refs[pid] += 1
+        self._extra_peak = max(self._extra_peak, self.n_shared_extra)
         if self.metrics is not None:
             self.metrics.counter("page_refs_total").inc(len(pages))
 
@@ -147,6 +149,11 @@ class BankAwarePlacement:
         """Extra references beyond one owner per live page -- the number of
         physical pages copy-on-write sharing is currently saving."""
         return sum(self._refs.values()) - len(self._refs)
+
+    @property
+    def shared_extra_peak(self) -> int:
+        """High-water mark of :attr:`n_shared_extra` over the pool's life."""
+        return self._extra_peak
 
     # ------------- accounting -------------
 

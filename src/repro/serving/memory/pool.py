@@ -199,8 +199,8 @@ class PagedStatePool:
     def usable_pages(self) -> int:
         return self.placement.n_usable
 
-    def can_admit(self, n_pages: int) -> bool:
-        return self.free_pages >= n_pages and self.free_slabs >= 1
+    def can_admit(self, n_pages: int, n_slabs: int = 1) -> bool:
+        return self.free_pages >= n_pages and self.free_slabs >= n_slabs
 
     def register(self, rid: int, n_pages: int) -> bool:
         """Claim a slab + ``n_pages`` pages for a new / resuming request."""
@@ -356,9 +356,10 @@ class PagedStatePool:
                       shared_pages=len(sp.shared))
         return True
 
-    def drop_spilled(self, sp: SpilledRequest):
+    def drop_spilled(self, sp: SpilledRequest, rid: Optional[int] = None):
         """Abort a spilled request: release the references its blob holds on
-        still-resident shared pages (the last owner to drop frees them)."""
+        still-resident shared pages (the last owner to drop frees them).
+        ``rid`` lets tiered subclasses release per-request host accounting."""
         self.placement.unref([pid for _, pid in sp.shared])
         sp.shared = []
 
@@ -448,6 +449,12 @@ class PagedStatePool:
         """Physical pages currently saved by copy-on-write sharing: extra
         references beyond one owner per live page."""
         return self.placement.n_shared_extra
+
+    @property
+    def shared_savings_peak(self) -> int:
+        """High-water mark of :attr:`shared_page_savings` -- survives
+        request release, so end-of-run stats still show what sharing saved."""
+        return self.placement.shared_extra_peak
 
     def fragmentation(self, lengths: Dict[int, int]) -> float:
         """1 - used_tokens / allocated_token_capacity over resident requests

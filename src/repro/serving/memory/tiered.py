@@ -1,0 +1,491 @@
+"""Two-tier (device HBM <-> pinned host DRAM) paged pool with async
+prefetch and a persistent cross-request prefix cache.
+
+``TieredStatePool`` extends :class:`~repro.serving.memory.pool.PagedStatePool`
+with the memory hierarchy the ROADMAP calls for:
+
+  * **host tier** -- preemption spills still move a victim's private pages to
+    host bit-exactly (the base class), but the bytes are now *accounted*
+    against a host-tier budget (:class:`HostTier`) and come back through an
+    **async prefetch** path: ``prefetch_begin`` dispatches the device copy
+    (JAX's async dispatch returns immediately) into freshly allocated staging
+    pages while decode keeps stepping, and ``prefetch_commit`` later installs
+    the staged pages into the block table -- an O(1) bookkeeping operation,
+    no synchronous gather in the step loop.  The staging pages *are* the
+    final pages (dispatch-then-commit double buffering, no bounce copy).
+  * **prefix store** -- a :class:`~.prefix_store.PrefixStore` radix tree keyed
+    by token ids remembers every *full* 128-token prompt page a request
+    prefills (plus, for recurrent/hybrid models, a host snapshot of the
+    recurrent state at each page boundary).  A later request whose prompt
+    shares that prefix adopts the stored pages with a refcount bump -- the
+    same copy-on-write sharing a ``Session.fork`` buys, but automatic and
+    across requests.  Stored pages outlive their creating request under
+    ``prefix_store_pages`` capacity with LRU + refcount-aware eviction, and
+    can themselves be demoted to the host tier and promoted back on a hit
+    (a *cold* hit), staying bit-exact either way.
+
+Nothing here adds decode-shape retraces: prefetch reuses the same
+``insert_blob`` jit signatures as synchronous resume, and page-table installs
+never change block-table bucketing rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.memory.layout import PAGE_TOKENS
+from repro.serving.memory.pool import PagedStatePool, SpilledRequest
+from repro.serving.memory.prefix_store import PrefixStore, StoredPage
+
+
+class HostTier:
+    """Byte ledger for the pinned-host tier.
+
+    Two classes of payload:
+
+      * **pinned** spill blobs (``pin``/``unpin`` keyed by rid) -- a preempted
+        request's bits must survive no matter what, so pins may overshoot the
+        budget (the alternative is dropping live state);
+      * **cached** prefix-store payloads (``cache_add``/``cache_drop``) --
+        best-effort, admitted only while ``room_for`` says the budget holds.
+
+    ``byte_budget=None`` means unmetered (the pre-tiered behaviour).
+    """
+
+    def __init__(self, byte_budget: Optional[int] = None):
+        self.byte_budget = byte_budget
+        self._pinned: Dict[int, float] = {}
+        self.cached_bytes = 0.0
+
+    @property
+    def pinned_bytes(self) -> float:
+        return sum(self._pinned.values())
+
+    @property
+    def bytes_used(self) -> float:
+        return self.pinned_bytes + self.cached_bytes
+
+    def room_for(self, nbytes: float) -> bool:
+        if self.byte_budget is None:
+            return True
+        return self.bytes_used + nbytes <= self.byte_budget
+
+    def pin(self, rid: int, nbytes: float) -> None:
+        self._pinned[rid] = self._pinned.get(rid, 0.0) + nbytes
+
+    def unpin(self, rid: int) -> float:
+        return self._pinned.pop(rid, 0.0)
+
+    def cache_add(self, nbytes: float) -> None:
+        self.cached_bytes += nbytes
+
+    def cache_drop(self, nbytes: float) -> None:
+        self.cached_bytes = max(0.0, self.cached_bytes - nbytes)
+
+
+@dataclasses.dataclass
+class _Staged:
+    """An in-flight prefetch: device copy dispatched, not yet committed."""
+    pages: List[int]
+    slab: int
+    sp: SpilledRequest
+    ts0: float          # tracer timestamp at dispatch
+
+
+def _blob_nbytes(blob) -> float:
+    return float(sum(np.asarray(x).nbytes for x in blob))
+
+
+class TieredStatePool(PagedStatePool):
+    """Paged pool with a host tier, async spill-resume prefetch, and an
+    automatic cross-request prefix cache.  Drop-in for ``PagedStatePool``."""
+
+    def __init__(self, cfg, *args, host_tier_bytes: Optional[int] = None,
+                 prefix_cache: bool = False, prefix_store_pages: int = 64,
+                 **kw):
+        super().__init__(cfg, *args, **kw)
+        self.host = HostTier(host_tier_bytes)
+        self.store: Optional[PrefixStore] = (
+            PrefixStore(prefix_store_pages) if prefix_cache else None)
+        self._staged: Dict[int, _Staged] = {}
+        #: cross-request prefix-cache hit ledger
+        self.prefix_hits = 0
+        self.prefix_hit_pages = 0
+        self.prefix_hit_tokens = 0
+        self.prefetch_commits = 0
+        # tier movement jits: bare page stacks and slab rows (the units of
+        # store demotion / promotion and state-snapshot capture).  Extracts
+        # never donate -- callers keep using the pools; inserts donate like
+        # every other pool-chain op.
+        self._extract_pages = jax.jit(self.paging.extract_pages)
+        self._insert_pages = jax.jit(self.paging.insert_pages,
+                                     donate_argnums=(0,))
+        self._extract_slab = jax.jit(self.paging.extract_slab)
+        self._insert_slab = jax.jit(self.paging.insert_slab,
+                                    donate_argnums=(0,))
+        self._has_slabs = any(s.kind == "slab" for s in self.paging.specs)
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    def attach_obs(self, obs) -> None:
+        super().attach_obs(obs)
+        self._extract_pages = obs.wrap_jit(self._extract_pages,
+                                           "pool.tier_extract")
+        self._insert_pages = obs.wrap_jit(self._insert_pages,
+                                          "pool.tier_insert")
+        self._extract_slab = obs.wrap_jit(self._extract_slab,
+                                          "pool.slab_extract")
+        self._insert_slab = obs.wrap_jit(self._insert_slab,
+                                         "pool.slab_insert")
+
+    def _tier_metric(self, name: str, v: float = 1.0, **labels) -> None:
+        if self._obs is not None:
+            self._obs.metrics.counter(name, **labels).inc(v)
+
+    def _tier_instant(self, name: str, **args) -> None:
+        if self._obs is not None:
+            self._obs.tracer.instant(name, cat="tier", track="pool", **args)
+
+    def _sync_host_gauge(self) -> None:
+        if self._obs is not None:
+            self._obs.metrics.gauge("host_tier_bytes").set(
+                self.host.bytes_used)
+
+    # ------------------------------------------------------------------
+    # spill / resume with host-tier accounting
+    # ------------------------------------------------------------------
+
+    def spill(self, rid: int, length: int) -> SpilledRequest:
+        sp = super().spill(rid, length)
+        nbytes = _blob_nbytes(sp.blob)
+        self.host.pin(rid, nbytes)
+        self._tier_metric("demote_bytes_total", nbytes, kind="spill")
+        self._tier_instant("tier.demote", rid=rid, bytes=nbytes, kind="spill")
+        self._sync_host_gauge()
+        return sp
+
+    def resume(self, rid: int, sp: SpilledRequest) -> bool:
+        """Synchronous resume -- the fallback when no prefetch was staged.
+        A staged prefetch commits instead (O(1), no gather here)."""
+        if rid in self._staged:
+            return self.prefetch_commit(rid)
+        if not super().resume(rid, sp):
+            return False
+        nbytes = self.host.unpin(rid)
+        self._tier_metric("tier_miss_total", kind="resume")
+        self._tier_metric("promote_bytes_total", nbytes, kind="resume")
+        self._tier_instant("tier.promote", rid=rid, bytes=nbytes,
+                           kind="resume")
+        self._sync_host_gauge()
+        return True
+
+    def drop_spilled(self, sp: SpilledRequest, rid: Optional[int] = None):
+        super().drop_spilled(sp, rid)
+        if rid is not None:
+            self.host.unpin(rid)
+            self._sync_host_gauge()
+
+    # ------------------------------------------------------------------
+    # async prefetch (dispatch-then-commit)
+    # ------------------------------------------------------------------
+
+    def prefetch_begin(self, rid: int, sp: SpilledRequest,
+                       reserve: int = 1) -> bool:
+        """Dispatch the device copy for a spilled request's blob into fresh
+        staging pages, without installing them.  Returns False (no-op) when
+        pages/slabs are too tight -- ``reserve`` pages are left free so
+        staging never starves decode growth."""
+        if rid in self._staged or rid in self.page_table:
+            return rid in self._staged
+        need = sp.pages_needed
+        if self.free_pages < need + reserve or self.free_slabs < 2:
+            return False
+        pages = self.placement.alloc(need)
+        if pages is None:
+            return False
+        self.pages_allocated += need
+        slab = self._free_slabs.pop()
+        ts0 = (self._obs.tracer.now_us() if self._obs is not None else 0.0)
+        # async dispatch: XLA begins the host->device copy immediately and
+        # returns; the step loop keeps dispatching decode kernels behind it
+        self.pools = self._insert_blob(self.pools, sp.blob,
+                                       jnp.asarray(pages, jnp.int32),
+                                       jnp.int32(slab))
+        self._staged[rid] = _Staged(pages, slab, sp, ts0)
+        self._tier_instant("prefetch.dispatch", rid=rid, pages=need)
+        return True
+
+    def prefetch_ready(self, rid: int) -> bool:
+        return rid in self._staged
+
+    def prefetch_commit(self, rid: int) -> bool:
+        """Install a staged prefetch: build the block table from still-
+        resident shared pages + the staged private pages.  O(1) bookkeeping;
+        the data moved while decode was running."""
+        st = self._staged.pop(rid, None)
+        if st is None:
+            return False
+        assert rid not in self.page_table
+        sp = st.sp
+        table = [0] * sp.n_pages
+        for pos, pid in sp.shared:
+            table[pos] = pid
+        for pos, pid in zip(sp.private_idx, st.pages):
+            table[pos] = pid
+        self.page_table[rid] = table
+        self.slab_of[rid] = st.slab
+        nbytes = self.host.unpin(rid)
+        self._account_gather(self.request_nbytes(sp.pages_needed))
+        self.prefetch_commits += 1
+        self._tier_metric("tier_hit_total", kind="prefetch")
+        self._tier_metric("promote_bytes_total", nbytes, kind="prefetch")
+        self._sync_host_gauge()
+        if self._obs is not None:
+            ts1 = self._obs.tracer.now_us()
+            self._obs.tracer.async_span("prefetch", rid, cat="prefetch",
+                                        ts0=st.ts0, ts1=ts1, track="pool",
+                                        rid=rid, pages=sp.pages_needed)
+        return True
+
+    def prefetch_cancel(self, rid: int) -> None:
+        """Abandon a staged prefetch (request aborted / truncated): return
+        the staging pages and slab; the host blob stays pinned."""
+        st = self._staged.pop(rid, None)
+        if st is None:
+            return
+        self.placement.unref(st.pages)
+        self._free_slabs.append(st.slab)
+        if self._obs is not None:
+            ts1 = self._obs.tracer.now_us()
+            self._obs.tracer.async_span("prefetch", rid, cat="prefetch",
+                                        ts0=st.ts0, ts1=ts1, track="pool",
+                                        rid=rid, canceled=True)
+
+    # ------------------------------------------------------------------
+    # prefix store: match / admit / insert / tiering
+    # ------------------------------------------------------------------
+
+    def prefix_match(self, prompt: Sequence[int]) -> Optional[List[StoredPage]]:
+        """Longest usable stored prefix for ``prompt``, or None.
+
+        Pure lookup -- no metrics (the engine may probe repeatedly while a
+        request waits in the queue); hit/miss is counted at admission.  The
+        match is capped so at least one prompt token remains un-cached (the
+        engine needs a tail to feed through prefill/decode), and trimmed to
+        the deepest node carrying a recurrent-state snapshot (without the
+        state at the boundary, a hit would not be bit-exact for SSM/hybrid
+        models)."""
+        if self.store is None or len(prompt) <= PAGE_TOKENS:
+            return None
+        max_pages = (len(prompt) - 1) // PAGE_TOKENS
+        path = self.store.match(self.store.chunks(prompt, max_pages))
+        while path and path[-1].state is None:
+            path.pop()
+        return path or None
+
+    def prefix_admit(self, rid: int, nodes: List[StoredPage]) -> bool:
+        """Admit ``rid`` with its first ``len(nodes)`` pages adopted from the
+        store (refcount bumps, no prefill).  Demoted nodes are promoted
+        first; the tail node's state snapshot is written into the fresh
+        slab.  Returns False (nothing changed) if capacity is short."""
+        assert self.store is not None and nodes
+        assert rid not in self.page_table
+        cold = [n for n in nodes if not n.resident]
+        if not self.can_admit(len(cold)):
+            return False
+        for n in cold:
+            if not self.promote_node(n):
+                return False
+        warm = len(nodes) - len(cold)
+        pages = [n.device_page for n in nodes]
+        self.placement.ref(pages)
+        self.shared_page_hits += len(pages)
+        self.page_table[rid] = list(pages)
+        slab = self._free_slabs.pop()
+        self.slab_of[rid] = slab
+        tail = nodes[-1]
+        if self._has_slabs:
+            self.pools = self._insert_slab(self.pools, tail.state,
+                                           jnp.int32(slab))
+            self._account_gather(self.slab_nbytes)
+        self.store.touch(nodes)
+        self.prefix_hits += 1
+        self.prefix_hit_pages += len(nodes)
+        self.prefix_hit_tokens += len(nodes) * PAGE_TOKENS
+        self._tier_metric("tier_hit_total", kind="prefix")
+        self._tier_instant("tier.prefix_hit", rid=rid, pages=len(nodes),
+                           warm=warm, cold=len(cold))
+        return True
+
+    def note_prefix_miss(self) -> None:
+        if self.store is not None:
+            self._tier_metric("tier_miss_total", kind="prefix")
+
+    def snapshot_slab(self, rid: int) -> List[np.ndarray]:
+        """Host copy of ``rid``'s recurrent-state slab row (may be [])."""
+        if not self._has_slabs:
+            return []
+        blob = self._extract_slab(self.pools, jnp.int32(self.slab_of[rid]))
+        return [np.asarray(x) for x in blob]
+
+    def store_insert(self, rid: int, tokens: Sequence[int]) -> int:
+        """Record ``rid``'s pages for the exact-page-boundary prefix
+        ``tokens`` (``len(tokens) % PAGE_TOKENS == 0``) in the store.  The
+        store takes one placement ref per newly created node, and the tail
+        node captures the request's recurrent state at this boundary.
+        Returns the number of new nodes."""
+        if self.store is None or len(tokens) == 0:
+            return 0
+        assert len(tokens) % PAGE_TOKENS == 0
+        chunks = self.store.chunks(tokens)
+        path, created = self.store.extend(chunks)
+        table = self.page_table[rid]
+        for node in created:
+            node.device_page = table[node.depth - 1]
+            self.placement.ref([node.device_page])
+        tail = path[-1]
+        if tail.state is None:
+            state = self.snapshot_slab(rid)
+            tail.state = state
+            nbytes = _blob_nbytes(state)
+            self.host.cache_add(nbytes)
+            self._account_gather(self.slab_nbytes)
+            self._sync_host_gauge()
+        if created:
+            self._tier_instant("tier.store_insert", rid=rid,
+                               pages=len(created), depth=len(path))
+        self._enforce_store_capacity()
+        return len(created)
+
+    # ------------------------------------------------------------------
+    # store tiering: demote / promote / evict
+    # ------------------------------------------------------------------
+
+    def _locked(self, node: StoredPage) -> bool:
+        """A node whose device page other owners still reference (live
+        requests, spill blobs) must not be demoted or evicted."""
+        return (node.resident
+                and self.placement.refcount(node.device_page) > 1)
+
+    def demote_node(self, node: StoredPage) -> bool:
+        """Move one resident store node's page payload to the host tier and
+        free its device page.  Refuses locked nodes; falls back to eviction
+        when the host budget has no room (a cache entry is best-effort)."""
+        if not node.resident or self._locked(node):
+            return False
+        nbytes = self.page_nbytes
+        if not self.host.room_for(nbytes):
+            if node.is_leaf:
+                self.evict_node(node)
+            return False
+        blob = self._extract_pages(
+            self.pools, jnp.asarray([node.device_page], jnp.int32))
+        node.host_blob = [np.asarray(x) for x in blob]
+        self.placement.unref([node.device_page])
+        node.device_page = None
+        self.host.cache_add(nbytes)
+        self._account_gather(nbytes)
+        self._tier_metric("demote_bytes_total", float(nbytes), kind="store")
+        self._tier_instant("tier.demote", node=node.node_id,
+                           bytes=float(nbytes), kind="store")
+        self._sync_host_gauge()
+        return True
+
+    def promote_node(self, node: StoredPage) -> bool:
+        """Bring a demoted store node back to the device (a cold hit)."""
+        if node.resident:
+            return True
+        assert node.host_blob is not None
+        got = self.placement.alloc(1)
+        if got is None:
+            return False
+        self.pages_allocated += 1
+        self.pools = self._insert_pages(self.pools, node.host_blob,
+                                        jnp.asarray(got, jnp.int32))
+        node.device_page = got[0]
+        node.host_blob = None
+        nbytes = self.page_nbytes
+        self.host.cache_drop(nbytes)
+        self._account_gather(nbytes)
+        self._tier_metric("promote_bytes_total", float(nbytes), kind="store")
+        self._tier_instant("tier.promote", node=node.node_id,
+                           bytes=float(nbytes), kind="store")
+        self._sync_host_gauge()
+        return True
+
+    def evict_node(self, node: StoredPage) -> None:
+        """Drop a leaf store node entirely (device ref and/or host bytes)."""
+        assert not self._locked(node)
+        self.store.remove(node)
+        if node.resident:
+            self.placement.unref([node.device_page])
+            node.device_page = None
+        if node.host_blob is not None:
+            self.host.cache_drop(self.page_nbytes)
+            node.host_blob = None
+        if node.state is not None:
+            self.host.cache_drop(_blob_nbytes(node.state))
+            node.state = None
+        self._tier_instant("tier.evict", node=node.node_id)
+        self._sync_host_gauge()
+
+    def _enforce_store_capacity(self) -> None:
+        over = self.store.over_capacity()
+        while over > 0:
+            cands = self.store.evict_candidates(locked=self._locked)
+            if not cands:
+                break
+            self.evict_node(cands[0])
+            over -= 1
+
+    def reclaim(self, n_pages: int) -> int:
+        """Free device pages by demoting (or evicting) LRU store nodes until
+        ``n_pages`` are available.  Returns pages actually reclaimed."""
+        if self.store is None:
+            return 0
+        got = 0
+        for node in self.store.lru_nodes():
+            if self.free_pages >= n_pages:
+                break
+            if not node.resident or self._locked(node):
+                continue
+            if self.demote_node(node):
+                got += 1
+            elif node.is_leaf:
+                # demote refused for host-budget reasons and evicted inside
+                got += 1
+        return got
+
+    def demote_all(self) -> int:
+        """Demote every unlocked resident store node to the host tier
+        (cold-store hook for tests / checkpoint-style drains)."""
+        if self.store is None:
+            return 0
+        n = 0
+        for node in self.store.nodes():
+            if node.resident and not self._locked(node):
+                if self.demote_node(node):
+                    n += 1
+        return n
+
+    def prefetch_prefix(self, prompt: Sequence[int]) -> int:
+        """Scheduler lookahead hook: promote demoted store nodes matching a
+        queued prompt ahead of its admission, so the hit is warm by the time
+        the request admits.  Returns nodes promoted."""
+        nodes = self.prefix_match(prompt)
+        if not nodes:
+            return 0
+        n = 0
+        for node in nodes:
+            if not node.resident and self.free_pages > 1:
+                if self.promote_node(node):
+                    n += 1
+        if n:
+            self._tier_instant("prefetch.prefix", pages=n)
+        return n

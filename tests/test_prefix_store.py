@@ -1,0 +1,217 @@
+"""Radix prefix store: tree invariants (deterministic + hypothesis
+property tests when available) and end-to-end bit-exactness of warm and
+cold cross-request prefix hits for an attention arch (llama) and a hybrid
+arch (zamba2)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.state_update import StateQuantConfig
+from repro.models import model as M
+from repro.serving.api import Engine, ServeConfig
+from repro.serving.memory import PAGE_TOKENS
+from repro.serving.memory.prefix_store import PrefixStore
+from repro.serving.sampler import SamplingConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container has no hypothesis; CI installs it
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# pure-tree invariants (no jax, no model)
+# ---------------------------------------------------------------------------
+
+def _tok(page_vals, page_tokens=4):
+    """Token list whose i-th page chunk is page_vals[i] repeated."""
+    out = []
+    for v in page_vals:
+        out.extend([v] * page_tokens)
+    return out
+
+
+def test_chunks_drops_partial_tail():
+    s = PrefixStore(8, page_tokens=4)
+    assert s.chunks([1, 2, 3]) == []
+    assert s.chunks([1, 2, 3, 4, 5]) == [(1, 2, 3, 4)]
+    assert s.chunks([1, 2, 3, 4, 5, 6, 7, 8], max_pages=1) == [(1, 2, 3, 4)]
+
+
+def test_extend_then_match_longest_prefix():
+    s = PrefixStore(8, page_tokens=4)
+    path, created = s.extend(s.chunks(_tok([1, 2, 3])))
+    assert len(path) == len(created) == 3
+    assert [n.depth for n in path] == [1, 2, 3]
+    # full match
+    assert s.match(s.chunks(_tok([1, 2, 3]))) == path
+    # longest-prefix: diverges at page 2
+    assert s.match(s.chunks(_tok([1, 2, 9]))) == path[:2]
+    assert s.match(s.chunks(_tok([9, 2, 3]))) == []
+    # re-extend creates nothing new, shares the path
+    path2, created2 = s.extend(s.chunks(_tok([1, 2, 3, 4])))
+    assert path2[:3] == path and len(created2) == 1
+
+
+def test_eviction_leaf_only_lru_order():
+    s = PrefixStore(8, page_tokens=4)
+    s.extend(s.chunks(_tok([1, 2, 3])))
+    cands = s.evict_candidates()
+    assert [n.depth for n in cands] == [3]      # only the leaf
+    s.remove(cands[0])
+    assert s.n_pages == 2
+    # now depth-2 is the leaf
+    assert [n.depth for n in s.evict_candidates()] == [2]
+
+
+def test_locked_nodes_never_evicted():
+    s = PrefixStore(2, page_tokens=4)
+    path, _ = s.extend(s.chunks(_tok([1, 2])))
+    locked = {path[-1].node_id}
+    cands = s.evict_candidates(locked=lambda n: n.node_id in locked)
+    assert cands == []                          # leaf locked, parent interior
+    assert s.over_capacity() == 0
+    s.extend(s.chunks(_tok([1, 9])))            # now over capacity
+    assert s.over_capacity() == 1
+    cands = s.evict_candidates(locked=lambda n: n.node_id in locked)
+    assert [n.chunk for n in cands] == [(9, 9, 9, 9)]
+
+
+def test_lru_touch_on_match():
+    s = PrefixStore(8, page_tokens=4)
+    pa, _ = s.extend(s.chunks(_tok([1, 2])))
+    pb, _ = s.extend(s.chunks(_tok([3, 4])))
+    s.match(s.chunks(_tok([1, 2])))             # touch path A
+    order = s.evict_candidates()
+    assert order[0] is pb[-1]                   # B's leaf is now LRU
+
+
+if HAVE_HYPOTHESIS:
+    _page_vals = st.lists(st.integers(0, 3), min_size=1, max_size=5)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(_page_vals, min_size=1, max_size=12))
+    def test_prop_match_is_longest_stored_prefix(seqs):
+        s = PrefixStore(capacity_pages=1000, page_tokens=4)
+        inserted = set()
+        for vals in seqs:
+            s.extend(s.chunks(_tok(vals)))
+            for i in range(1, len(vals) + 1):
+                inserted.add(tuple(vals[:i]))
+        for vals in seqs:
+            probe = vals + [7]                  # diverge past the stored path
+            path = s.match(s.chunks(_tok(probe)))
+            depths = [tuple(probe[:i]) in inserted
+                      for i in range(1, len(probe) + 1)]
+            expect = 0
+            for hit in depths:
+                if not hit:
+                    break
+                expect += 1
+            assert len(path) == expect
+            assert [n.depth for n in path] == list(range(1, expect + 1))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(_page_vals, min_size=1, max_size=12),
+           st.integers(1, 6))
+    def test_prop_eviction_respects_capacity_locks_and_leaves(seqs, cap):
+        s = PrefixStore(capacity_pages=cap, page_tokens=4)
+        for vals in seqs:
+            s.extend(s.chunks(_tok(vals)))
+        locked_ids = {n.node_id for n in s.nodes()[::3]}   # every 3rd locked
+        locked = lambda n: n.node_id in locked_ids
+        while s.over_capacity() > 0:
+            cands = s.evict_candidates(locked=locked)
+            if not cands:
+                break
+            s.remove(cands[0])
+        # capacity met unless locks forbid it; locked nodes all survived
+        live = {n.node_id for n in s.nodes()}
+        assert locked_ids <= live
+        if s.over_capacity() > 0:
+            assert all(locked(n) for n in s.evict_candidates())
+        # parent-chain integrity: every node's parent is live and its chunk
+        # still resolves through the tree
+        for n in s.nodes():
+            if n.parent is not None:
+                assert n.parent.node_id in live
+                assert n.parent.children[n.chunk] is n
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_prop_match_is_longest_stored_prefix():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_prop_eviction_respects_capacity_locks_and_leaves():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# end-to-end bit-exactness: warm + cold store hits vs full re-prefill
+# ---------------------------------------------------------------------------
+
+def _greedy_pair(arch):
+    cfg = get_smoke_config(arch).with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _serve(params, cfg, prompts, prefix_cache, max_new=5):
+    eng = Engine(params, cfg, ServeConfig(
+        backend="paged", batch=2, n_pages=17, n_slabs=5,
+        sampling=SamplingConfig(temperature=0.0),
+        prefix_cache=prefix_cache, prefix_store_pages=8))
+    hs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run()
+    return eng, hs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-2.7b"])
+def test_store_hit_bit_exact_warm_and_cold(arch):
+    params, cfg = _greedy_pair(arch)
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(0, cfg.vocab_size, PAGE_TOKENS).astype(np.int32)
+    prompts = [np.concatenate(
+        [sysp, rng.integers(0, cfg.vocab_size, 10).astype(np.int32)])
+        for _ in range(2)]
+
+    eng_b, refs = _serve(params, cfg, prompts, prefix_cache=False)
+    eng_s, hits = _serve(params, cfg, prompts, prefix_cache=True)
+    st = eng_s.stats()
+    assert [h.output for h in hits] == [r.output for r in refs]
+    assert st["prefix_hits"] == 1          # request 1 adopted request 0's page
+    assert st["shared_page_hits"] >= 1
+    assert st["prefill_tokens"] < eng_b.stats()["prefill_tokens"]
+
+    # cold: demote the stored page(s) to host, hit must promote + stay exact
+    pool = eng_s.engine.pool
+    assert pool.demote_all() >= 1
+    cold_prompt = np.concatenate(
+        [sysp, rng.integers(0, cfg.vocab_size, 10).astype(np.int32)])
+    ref = eng_b.submit(cold_prompt, max_new_tokens=5)
+    eng_b.run()
+    hit = eng_s.submit(cold_prompt, max_new_tokens=5)
+    eng_s.run()
+    st2 = eng_s.stats()
+    assert hit.output == ref.output
+    assert st2["prefix_hits"] == 2
+    if pool.page_nbytes > 0:
+        assert st2["promote_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_store_hit_prefill_token_accounting():
+    params, cfg = _greedy_pair("llama3.2-1b")
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 150).astype(np.int32)
+    eng, (h0, h1) = _serve(params, cfg, [prompt, prompt.copy()], True)
+    st = eng.stats()
+    assert h0.output == h1.output
+    # request 0 ingests all 150; request 1 only the 22-token un-cached tail
+    assert st["prefill_tokens"] == 150 + (150 - PAGE_TOKENS)
+    assert st["prefix_hit_tokens"] == PAGE_TOKENS

@@ -1,0 +1,170 @@
+"""Tiered memory hierarchy: scheduler lookahead, host-tier budget
+accounting, and the async spill-resume prefetch path -- bit-exact resume
+with the device copy overlapping decode (verified via trace spans)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.state_update import StateQuantConfig
+from repro.models import model as M
+from repro.serving.api import Engine, ServeConfig
+from repro.serving.engine import Request
+from repro.serving.memory.tiered import HostTier
+from repro.serving.sampler import SamplingConfig
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+# ---------------------------------------------------------------------------
+# scheduler lookahead
+# ---------------------------------------------------------------------------
+
+def _req(rid, priority=0, t=0.0):
+    r = Request(rid=rid, prompt=np.zeros(4, np.int32), priority=priority)
+    r.t_submit = t
+    return r
+
+
+def test_lookahead_dispatch_order_without_popping():
+    s = Scheduler(SchedulerConfig(policy="priority"))
+    for rid, pri in ((0, 5), (1, 0), (2, 3)):
+        s.push(_req(rid, pri, t=rid))
+    assert [r.rid for r in s.lookahead(2)] == [1, 2]
+    assert [r.rid for r in s.lookahead(10)] == [1, 2, 0]
+    assert len(s) == 3                       # nothing popped
+    s.remove(1)
+    assert [r.rid for r in s.lookahead(2)] == [2, 0]   # tombstone skipped
+
+
+def test_lookahead_respects_resume_boost():
+    s = Scheduler(SchedulerConfig(policy="priority"))
+    s.push(_req(0, priority=1, t=0.0))
+    s.push(_req(1, priority=1, t=1.0), resumed=True)   # boost beats t_submit
+    assert [r.rid for r in s.lookahead(2)] == [1, 0]
+
+
+# ---------------------------------------------------------------------------
+# host tier ledger
+# ---------------------------------------------------------------------------
+
+def test_host_tier_pins_overshoot_cache_respects_budget():
+    h = HostTier(byte_budget=100)
+    h.pin(1, 80.0)
+    assert h.room_for(20) and not h.room_for(21)
+    h.pin(2, 50.0)                 # pins may overshoot: live state survives
+    assert h.bytes_used == 130.0 and not h.room_for(1)
+    assert h.unpin(1) == 80.0 and h.unpin(1) == 0.0
+    h.cache_add(40.0)
+    assert h.bytes_used == 90.0
+    h.cache_drop(60.0)             # clamped at zero
+    assert h.cached_bytes == 0.0
+    assert HostTier(None).room_for(1e18)     # unmetered
+
+
+def test_store_demote_falls_back_to_evict_when_budget_full():
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 140).astype(np.int32)
+    eng = Engine(params, cfg, ServeConfig(
+        backend="paged", batch=2, n_pages=17, n_slabs=5,
+        sampling=SamplingConfig(temperature=0.0),
+        prefix_cache=True, prefix_store_pages=4, host_tier_bytes=0))
+    eng.submit(prompt, max_new_tokens=3)
+    eng.run()
+    pool = eng.engine.pool
+    assert pool.store.n_pages >= 1
+    before = pool.store.n_pages
+    # budget 0: demote has no host room -> leaf nodes evict instead
+    assert pool.demote_all() == 0
+    assert pool.store.n_pages < before
+    assert pool.host.cached_bytes == 0.0      # eviction drained the ledger
+
+
+# ---------------------------------------------------------------------------
+# preempt -> host demotion -> async prefetch resume, overlapping decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_prefetch_resume_bit_exact_and_overlaps_decode():
+    cfg = get_smoke_config("llama3.2-1b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    greedy = SamplingConfig(temperature=0.0)
+    rng = np.random.default_rng(2)
+    prompt_b = rng.integers(0, cfg.vocab_size, 140).astype(np.int32)
+    prompt_a = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    def mk():
+        return Engine(params, cfg, ServeConfig(
+            backend="paged", batch=1, n_pages=9, n_slabs=5, sampling=greedy,
+            scheduler=SchedulerConfig(policy="priority")))
+
+    # reference: B served alone, never preempted
+    ref = mk()
+    ref_out = ref.submit(prompt_b, max_new_tokens=8, priority=5
+                         ).result().output
+
+    eng = mk()
+    hb = eng.submit(prompt_b, max_new_tokens=8, priority=5)
+    while hb.status == "queued" and eng.step():
+        pass
+    assert hb.status == "running"
+    # an urgent short request arrives; evict B to the host tier while A runs
+    ha = eng.submit(prompt_a, max_new_tokens=6, priority=0)
+    eng.engine._preempt(hb.rid)
+    eng.run()
+    st = eng.stats()
+
+    # bit-exact through spill -> host pin -> staged prefetch -> commit
+    assert ha.status == "done" and hb.status == "done"
+    assert hb.output == ref_out
+    assert st["preemptions"] >= 1
+    assert st["prefetch_commits"] >= 1      # resume went through the stage
+    assert st["tier_hits"] >= 1
+    assert st["demote_bytes"] > 0 and st["promote_bytes"] > 0
+    assert eng.engine.pool.host.pinned_bytes == 0    # ledger drained
+
+    # the staged copy must overlap decode: at least one decode_step X event
+    # falls entirely inside a prefetch b/e span
+    evs = eng.obs.tracer.events()
+    begins = [e for e in evs
+              if e.get("cat") == "prefetch" and e["ph"] == "b"]
+    ends = {e["id"]: e["ts"] for e in evs
+            if e.get("cat") == "prefetch" and e["ph"] == "e"}
+    steps = [e for e in evs if e.get("cat") == "step" and e["ph"] == "X"]
+    assert begins, "no prefetch span in the trace"
+    assert any(s["ts"] >= b["ts"] and s["ts"] + s["dur"] <= ends[b["id"]]
+               for b in begins for s in steps), \
+        "no decode step ran inside a prefetch span"
+
+
+def test_prefetch_cancel_returns_staging_pages():
+    cfg = get_smoke_config("mamba2-2.7b").with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    eng = Engine(params, cfg, ServeConfig(
+        backend="paged", batch=1, n_pages=9, n_slabs=5,
+        sampling=SamplingConfig(temperature=0.0),
+        scheduler=SchedulerConfig(policy="priority")))
+    hb = eng.submit(rng.integers(0, cfg.vocab_size, 20).astype(np.int32),
+                    max_new_tokens=8, priority=5)
+    while hb.status == "queued" and eng.step():
+        pass
+    ha = eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=4, priority=0)
+    eng.engine._preempt(hb.rid)
+    pool = eng.engine.pool
+    # stage the prefetch by stepping once with A active, then abort B
+    eng.step()
+    hb.abort()
+    assert hb.status == "aborted"
+    assert not pool.prefetch_ready(hb.rid)
+    ha.result()
+    assert ha.status == "done"
+    assert pool.host.pinned_bytes == 0
