@@ -1,0 +1,72 @@
+"""``repro.analysis.lint`` -- static analysis + sanitizers gating serving.
+
+The serving stack's correctness rests on three contracts that no unit test
+enforces *structurally*:
+
+  1. **jit stability** -- the step loop is only fast while it reuses one
+     compiled executable.  Host syncs in the decode loop, Python branches on
+     traced values, batch-composition-dependent shapes, and missing buffer
+     donation all silently retrace (the ``p99_step_s`` ~1s vs p50 ~3ms
+     pathology in the ROADMAP).  Pass 1 (:mod:`.jit_hazards`, ``JH1xx``)
+     walks every function reachable from a ``jax.jit`` / ``pl.pallas_call``
+     / ``obs.wrap_jit`` site and flags these hazards from the AST.
+  2. **page-ledger protocol** -- every page acquired (``alloc``/``ref``)
+     must have a release path (``unref``), spill blobs must pin host bytes,
+     and nothing may free a page other owners still share.  Pass 2
+     (:mod:`.ledger`, ``PL2xx``) checks the call-site protocol statically;
+     its runtime twin (:mod:`.runtime`, ``PL25x``, enabled by
+     ``REPRO_SANITIZE=1``) mirrors every refcount transition of the live
+     pools in a shadow ledger and raises on double-free, negative refcount,
+     use-after-evict, and teardown leaks.
+  3. **op-registry contracts** -- pimsim/roofline numbers are only
+     trustworthy if every registered (kind x backend x format x layout)
+     quadruple implements the plan/execute/traffic protocol coherently.
+     Pass 3 (:mod:`.contracts`, ``RC3xx``) verifies signatures, non-negative
+     page-aligned traffic for paged layouts, a jnp reference for every
+     pallas op, and that ``model_traffic.decode_op_plans`` covers every
+     config in ``repro.configs``.
+
+CLI::
+
+    python -m repro.analysis.lint src/ [--format json] \
+        [--baseline lint_baseline.json]
+
+Suppress a single finding with a trailing (or preceding-line) comment::
+
+    bt = np.zeros((B, npg), np.int32)   # lint: disable=JH103  bucketed
+
+The committed ``lint_baseline.json`` pins the accepted finding count per
+rule; CI fails if any rule's count grows (the baseline may only shrink).
+"""
+from __future__ import annotations
+
+from repro.analysis.lint.findings import (Finding, RULES, baseline_diff,
+                                          load_baseline, write_baseline)
+from repro.analysis.lint.jit_hazards import lint_jit_hazards
+from repro.analysis.lint.ledger import lint_ledger_protocol
+from repro.analysis.lint.runtime import SanitizerError, ShadowLedger
+
+__all__ = [
+    "Finding", "RULES", "run_lint",
+    "lint_jit_hazards", "lint_ledger_protocol",
+    "SanitizerError", "ShadowLedger",
+    "load_baseline", "write_baseline", "baseline_diff",
+]
+
+
+def run_lint(paths, include_contracts: bool = True):
+    """All three passes over ``paths`` (files or directories of .py files).
+
+    Returns the suppression-filtered findings, sorted by (file, line, code).
+    Pass 3 needs an importable ``repro`` (it introspects the live registry);
+    ``include_contracts=False`` keeps the run purely static.
+    """
+    from repro.analysis.lint.findings import iter_python_files
+    files = list(iter_python_files(paths))
+    findings = []
+    findings += lint_jit_hazards(files)
+    findings += lint_ledger_protocol(files)
+    if include_contracts:
+        from repro.analysis.lint.contracts import lint_registry_contracts
+        findings += lint_registry_contracts()
+    return sorted(findings, key=lambda f: (f.file, f.line, f.code))

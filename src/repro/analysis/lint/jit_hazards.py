@@ -1,0 +1,458 @@
+"""Pass 1: AST jit-hazard linter (``JH1xx``).
+
+Finds the retrace/perf hazards that keep resurfacing in the serving step
+loop, *before* a benchmark run has to discover them as a 1s p99 step:
+
+  * ``JH101`` host syncs (``.item()``, ``np.asarray``,
+    ``block_until_ready``) inside per-row loops of step/decode functions;
+  * ``JH102`` Python ``if``/``while``/``len`` on traced values inside
+    jit-compiled functions;
+  * ``JH103`` array shapes derived from ``len()``/``max()`` of mutating
+    batch state feeding jitted callables (batch-composition shape churn);
+  * ``JH104`` ``jax.jit`` over pool/cache-sized buffers without donation;
+  * ``JH105`` dict pytrees built from runtime-ordered (set-derived)
+    iterables inside jitted functions;
+  * ``JH106`` jitted functions reading ``self`` attributes that some other
+    method reassigns -- the closure bakes a stale constant and *never*
+    retraces.
+
+Reachability: roots are every function named in a ``jax.jit(...)`` /
+``pl.pallas_call(...)`` call or decoration, or handed to a
+``RecompileWatcher`` wrap site (``obs.wrap_jit(...)`` / ``watcher.wrap``);
+the walk closes over same-module calls (``f(...)`` and ``self.f(...)``).
+The rule set is deliberately heuristic -- suppress justified sites with
+``# lint: disable=JH1xx`` and let the committed baseline ratchet the rest.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint.findings import Finding, apply_suppressions
+
+#: parameters that are static configuration under jit, never traced
+_STATIC_PARAM_RE = re.compile(
+    r"^(self|cls|cfg|config|.*_cfg|mesh_axes|axis.*|name|mode|fmt|kind|"
+    r"backend|layout|plan|quant|options.*|static.*|spec|paging|topo.*)$")
+
+#: attribute reads that return static (trace-time) metadata, killing taint
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval"}
+
+#: step-loop function names rule JH101 applies to
+_STEP_FN_RE = re.compile(r"(^|_)(step|decode|prefill|run|loop)", re.I)
+
+#: host-synchronizing calls (attribute form / function form)
+_SYNC_ATTRS = {"item", "block_until_ready", "copy_to_host_async"}
+_SYNC_FUNCS = {("np", "asarray"), ("np", "array"), ("numpy", "asarray"),
+               ("numpy", "array"), ("jax", "device_get")}
+
+#: array constructors whose first argument is a shape
+_SHAPE_CTORS = {"zeros", "ones", "empty", "full", "zeros_like"}
+#: converters whose argument's *slicing* determines the shape
+_CONVERTERS = {"asarray", "array"}
+
+#: buffer parameter names whose jit should donate (pool-sized operands)
+_POOL_PARAMS = {"pools", "pool", "caches", "buffers"}
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _dotted(node: ast.AST) -> Optional[Tuple[str, str]]:
+    """("np", "zeros") for ``np.zeros`` / ("", "zeros") for bare calls."""
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        return node.value.id, node.attr
+    if isinstance(node, ast.Name):
+        return "", node.id
+    return None
+
+
+class _FunctionInfo:
+    def __init__(self, node: ast.AST, qualname: str,
+                 cls: Optional[str]):
+        self.node = node
+        self.qualname = qualname
+        self.cls = cls
+        self.calls: Set[str] = set()        # local callee names
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """One file's functions, jit roots, call edges, and class attr writes."""
+
+    def __init__(self):
+        self.functions: Dict[str, _FunctionInfo] = {}   # name -> info
+        self.jit_roots: Set[str] = set()                # local fn names
+        self.jit_calls: List[ast.Call] = []             # jax.jit(...) sites
+        #: class -> attrs assigned outside __init__
+        self.mutable_attrs: Dict[str, Set[str]] = {}
+        self._cls_stack: List[str] = []
+        self._fn_stack: List[str] = []
+
+    # -- structure ---------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._cls_stack.append(node.name)
+        self.mutable_attrs.setdefault(node.name, set())
+        self.generic_visit(node)
+        self._cls_stack.pop()
+
+    def _visit_fn(self, node):
+        cls = self._cls_stack[-1] if self._cls_stack else None
+        qual = f"{cls}.{node.name}" if cls else node.name
+        info = _FunctionInfo(node, qual, cls)
+        # last definition wins, mirroring runtime shadowing
+        self.functions[node.name] = info
+        for dec in node.decorator_list:
+            if self._is_jit_expr(dec):
+                self.jit_roots.add(node.name)
+        self._fn_stack.append(node.name)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    # -- jit sites / call edges / attr writes ------------------------
+
+    @staticmethod
+    def _is_jit_expr(node: ast.AST) -> bool:
+        d = _dotted(node)
+        if d in (("jax", "jit"), ("", "jit"), ("pl", "pallas_call"),
+                 ("", "pallas_call")):
+            return True
+        if isinstance(node, ast.Call):
+            return _ModuleIndex._is_jit_expr(node.func)
+        return False
+
+    def _root_names(self, node: ast.AST) -> Iterable[str]:
+        """Local function names an expression hands to jit."""
+        if isinstance(node, ast.Name):
+            yield node.id
+        elif isinstance(node, ast.Attribute):
+            # self.method -> method; obj.attr.method unresolvable
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                yield node.attr
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d and d[1] == "partial" and node.args:
+                yield from self._root_names(node.args[0])
+
+    def visit_Call(self, node: ast.Call):
+        d = _dotted(node.func)
+        if d in (("jax", "jit"), ("", "jit")):
+            self.jit_calls.append(node)
+            if node.args:
+                for n in self._root_names(node.args[0]):
+                    self.jit_roots.add(n)
+        elif d in (("pl", "pallas_call"), ("", "pallas_call")):
+            if node.args:
+                for n in self._root_names(node.args[0]):
+                    self.jit_roots.add(n)
+        elif d and d[1] in ("wrap_jit", "wrap") and node.args:
+            # RecompileWatcher wrap sites are jit sites by construction
+            for n in self._root_names(node.args[0]):
+                self.jit_roots.add(n)
+        if self._fn_stack:
+            callee = _name_of(node.func)
+            if callee:
+                self.functions[self._fn_stack[-1]].calls.add(callee)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        if self._fn_stack and self._cls_stack:
+            fn = self._fn_stack[-1]
+            if fn != "__init__":
+                for t in node.targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        self.mutable_attrs[self._cls_stack[-1]].add(t.attr)
+        self.generic_visit(node)
+
+    def reachable(self) -> Set[str]:
+        seen: Set[str] = set()
+        todo = [n for n in self.jit_roots if n in self.functions]
+        while todo:
+            n = todo.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            todo.extend(c for c in self.functions[n].calls
+                        if c in self.functions and c not in seen)
+        return seen
+
+
+# ---------------------------------------------------------------------------
+# taint: names derived from traced parameters / dynamic batch state
+# ---------------------------------------------------------------------------
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+
+def _collect_tainted(fn, seed: Set[str]) -> Set[str]:
+    """Fixed point of 'assigned from an expression mentioning a tainted
+    name' -- with taint killed through static metadata attributes."""
+    tainted = set(seed)
+
+    def expr_tainted(e: ast.AST) -> bool:
+        for sub in ast.walk(e):
+            if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+                return False if sub is e else expr_tainted(sub.value) and False
+        return any(isinstance(sub, ast.Name) and sub.id in tainted
+                   for sub in ast.walk(e))
+
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and expr_tainted(node.value):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if (isinstance(n, ast.Name)
+                                and n.id not in tainted):
+                            tainted.add(n.id)
+                            changed = True
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.target, ast.Name) and \
+                    expr_tainted(node.value) and \
+                    node.target.id not in tainted:
+                tainted.add(node.target.id)
+                changed = True
+    return tainted
+
+
+def _mentions(e: ast.AST, names: Set[str]) -> bool:
+    for sub in ast.walk(e):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            continue
+        if isinstance(sub, ast.Name) and sub.id in names:
+            # killed when only reached through .shape/.ndim/.dtype --
+            # approximate: a Compare/BinOp over x.shape[i] never taints
+            parent_static = False
+            return not parent_static
+    return False
+
+
+def _static_guard(test: ast.AST, tainted: Set[str]) -> bool:
+    """True for tests that are static under jit: `x is None`,
+    isinstance(x, T), or metadata-only comparisons."""
+    if isinstance(test, ast.Compare) and any(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.Call):
+        d = _dotted(test.func)
+        if d and d[1] in ("isinstance", "hasattr", "callable"):
+            return True
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# the rules
+# ---------------------------------------------------------------------------
+
+
+def _check_jitted_fn(info: _FunctionInfo, idx: _ModuleIndex, path: str,
+                     out: List[Finding]) -> None:
+    fn = info.node
+    seed = {p for p in _param_names(fn)
+            if not _STATIC_PARAM_RE.match(p)}
+    tainted = _collect_tainted(fn, seed)
+
+    for node in ast.walk(fn):
+        # JH102: Python control flow on traced values
+        if isinstance(node, (ast.If, ast.While)):
+            t = node.test
+            if _mentions(t, tainted) and not _static_guard(t, tainted):
+                out.append(Finding(
+                    "JH102",
+                    f"`{info.qualname}` branches in Python on a value "
+                    f"derived from traced argument(s) "
+                    f"{sorted(seed & tainted) or sorted(seed)}",
+                    path, node.lineno))
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            # JH102: len()/int()/bool() concretizing a traced value
+            if d and d[0] == "" and d[1] in ("len", "int", "bool", "float") \
+                    and node.args and _mentions(node.args[0], tainted):
+                out.append(Finding(
+                    "JH102",
+                    f"`{d[1]}()` of a traced value in jitted "
+                    f"`{info.qualname}`", path, node.lineno))
+            # JH105: runtime-ordered dict pytrees
+            elif d and d == ("", "dict") and _set_derived(node):
+                out.append(Finding(
+                    "JH105",
+                    f"dict pytree built from a set-derived iterable in "
+                    f"jitted `{info.qualname}`", path, node.lineno))
+        elif isinstance(node, ast.DictComp) and _set_derived(node):
+            out.append(Finding(
+                "JH105",
+                f"dict-comprehension pytree over a set-derived iterable "
+                f"in jitted `{info.qualname}`", path, node.lineno))
+        # JH106: stale closure over mutable enclosing state
+        elif isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, ast.Load) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self" and info.cls is not None and \
+                node.attr in idx.mutable_attrs.get(info.cls, ()):
+            out.append(Finding(
+                "JH106",
+                f"jitted `{info.qualname}` reads `self.{node.attr}`, "
+                f"which other methods reassign -- the traced value is a "
+                f"stale constant", path, node.lineno))
+
+
+def _set_derived(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Set):
+            return True
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d in (("", "set"), ("", "frozenset")):
+                return True
+    return False
+
+
+def _check_step_loops(info: _FunctionInfo, path: str,
+                      out: List[Finding]) -> None:
+    """JH101: host syncs inside per-row loops of step/decode functions."""
+    for loop in ast.walk(info.node):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        for node in ast.walk(loop):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_ATTRS) or d in _SYNC_FUNCS:
+                what = d[1] if d else node.func.attr
+                out.append(Finding(
+                    "JH101",
+                    f"host sync `{what}` inside a per-iteration loop of "
+                    f"step function `{info.qualname}` -- one device "
+                    f"round-trip per row, per step", path, node.lineno))
+
+
+def _check_dynamic_shapes(info: _FunctionInfo, path: str,
+                          out: List[Finding]) -> None:
+    """JH103: array shapes / slices sized by len()/max() of batch state."""
+    fn = info.node
+    dyn: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _has_dyn_size_call(node.value):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        dyn.add(n.id)
+    # second round: names assigned from expressions over dyn names
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(s, ast.Name) and s.id in dyn
+                for s in ast.walk(node.value)):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        dyn.add(n.id)
+
+    def dynamic(e: ast.AST) -> bool:
+        return _has_dyn_size_call(e) or any(
+            isinstance(s, ast.Name) and s.id in dyn for s in ast.walk(e))
+
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func)
+        if not d:
+            continue
+        if d[1] in _SHAPE_CTORS and node.args and dynamic(node.args[0]):
+            out.append(Finding(
+                "JH103",
+                f"`{d[0] + '.' if d[0] else ''}{d[1]}` in "
+                f"`{info.qualname}` sized by len()/max() of mutating "
+                f"batch state -- compiled shapes churn with batch "
+                f"composition", path, node.lineno))
+        elif d[1] in _CONVERTERS and node.args and any(
+                isinstance(s, ast.Subscript)
+                and isinstance(s.slice, ast.Slice)
+                and any(b is not None and dynamic(b)
+                        for b in (s.slice.lower, s.slice.upper))
+                for s in ast.walk(node.args[0])):
+            out.append(Finding(
+                "JH103",
+                f"`{d[1]}` over a dynamically sliced sequence in "
+                f"`{info.qualname}` -- the downstream jit compiles one "
+                f"executable per distinct length", path, node.lineno))
+
+
+def _has_dyn_size_call(e: ast.AST) -> bool:
+    for sub in ast.walk(e):
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d in (("", "len"), ("", "max"), ("", "min")):
+                return True
+    return False
+
+
+def _check_jit_donation(idx: _ModuleIndex, path: str,
+                        out: List[Finding]) -> None:
+    """JH104: jax.jit over resolvable pool-buffer functions, no donate."""
+    for call in idx.jit_calls:
+        if any(kw.arg in ("donate_argnums", "donate_argnames")
+               for kw in call.keywords):
+            continue
+        if not call.args:
+            continue
+        targets = [n for n in idx._root_names(call.args[0])
+                   if n in idx.functions]
+        for name in targets:
+            fn = idx.functions[name].node
+            pool_params = [p for p in _param_names(fn)
+                           if p in _POOL_PARAMS]
+            if pool_params:
+                out.append(Finding(
+                    "JH104",
+                    f"jax.jit over `{idx.functions[name].qualname}` "
+                    f"(pool-sized parameter(s) {pool_params}) without "
+                    f"donate_argnums -- XLA copies the pool every call",
+                    path, call.lineno))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def lint_jit_hazards(files: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for path in files:
+        try:
+            with open(path) as fh:
+                src = fh.read()
+            tree = ast.parse(src, filename=path)
+        except (OSError, SyntaxError):
+            continue
+        idx = _ModuleIndex()
+        idx.visit(tree)
+        if not idx.jit_roots and not idx.jit_calls:
+            continue
+        reach = idx.reachable()
+        for name, info in idx.functions.items():
+            if name in reach:
+                _check_jitted_fn(info, idx, path, out)
+            if _STEP_FN_RE.search(info.node.name):
+                _check_step_loops(info, path, out)
+            _check_dynamic_shapes(info, path, out)
+        _check_jit_donation(idx, path, out)
+    return apply_suppressions(out)

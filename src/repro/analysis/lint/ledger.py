@@ -1,0 +1,182 @@
+"""Pass 2 (static half): page-ledger protocol checker (``PL20x``).
+
+Checks the *call-site protocol* around the placement refcount API --
+``alloc``/``ref``/``unref``/``free`` -- plus the tiered-pool host-pin
+contract.  The runtime half (:mod:`.runtime`, ``PL25x``) catches what
+static analysis cannot: actual refcount arithmetic.
+
+Rules (receivers are matched by name -- a call counts as a ledger call
+when it goes through something called ``placement``, e.g.
+``self.placement.alloc(...)`` or a bare ``placement.ref(...)``):
+
+  * ``PL201`` an ``alloc`` result consumed without a ``None`` guard --
+    the allocator returns ``None`` under page pressure, not ``[]``;
+  * ``PL202`` a module that acquires references (``alloc``/``ref``) but
+    contains no release site (``unref``) at all;
+  * ``PL203`` a function that pops a request from ``page_table`` without
+    releasing (``unref``) or extracting to a spill -- a structural leak;
+  * ``PL204`` any call to ``placement.free`` -- the pre-refcount alias;
+    copy-on-write sharers require ``unref``;
+  * ``PL205`` a ``spill`` method on a host-tiered class (one that touches
+    ``self.host``) that never pins the blob bytes -- live state must not
+    be droppable from the host cache.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set
+
+from repro.analysis.lint.findings import Finding, apply_suppressions
+
+_ACQUIRE = {"alloc", "ref"}
+_RELEASE = {"unref"}
+
+
+def _is_placement_call(node: ast.Call, ops: Set[str]) -> bool:
+    f = node.func
+    if not (isinstance(f, ast.Attribute) and f.attr in ops):
+        return False
+    recv = f.value
+    if isinstance(recv, ast.Name):
+        return recv.id == "placement"
+    if isinstance(recv, ast.Attribute):
+        return recv.attr == "placement"
+    return False
+
+
+def _fn_name(node: ast.AST) -> Optional[str]:
+    return node.name if isinstance(
+        node, (ast.FunctionDef, ast.AsyncFunctionDef)) else None
+
+
+def _guarded_names(fn: ast.AST) -> Set[str]:
+    """Names that appear in any if/while/assert test within ``fn`` --
+    the conservative notion of 'checked before use'."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        test = None
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+        elif isinstance(node, ast.Assert):
+            test = node.test
+        if test is not None:
+            out |= {n.id for n in ast.walk(test) if isinstance(n, ast.Name)}
+    return out
+
+
+def _check_function(fn, path: str, host_tier_classes: Set[str],
+                    cls: Optional[str], out: List[Finding]) -> None:
+    name = _fn_name(fn)
+    guarded = _guarded_names(fn)
+    has_release = False
+    mentions_spill = "spill" in (name or "").lower()
+    pins = False
+
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "pin":
+                pins = True
+            if _is_placement_call(node, _RELEASE):
+                has_release = True
+            if _is_placement_call(node, {"free"}):
+                out.append(Finding(
+                    "PL204",
+                    f"`placement.free` in `{name}` is the pre-refcount "
+                    f"alias; copy-on-write sharers need `unref`",
+                    path, node.lineno))
+            if not mentions_spill:
+                mentions_spill = "spill" in f.attr.lower()
+
+    # PL201: alloc result assigned to a name never seen in a guard
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and \
+                _is_placement_call(node.value, {"alloc"}):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            for t in targets:
+                if t not in guarded:
+                    out.append(Finding(
+                        "PL201",
+                        f"`{t} = placement.alloc(...)` in `{name}` is "
+                        f"consumed without a None guard; alloc returns "
+                        f"None under page pressure", path, node.lineno))
+
+    # PL203: page_table.pop without a release path in the same function
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "pop" and \
+                isinstance(node.func.value, ast.Attribute) and \
+                node.func.value.attr == "page_table":
+            if not (has_release or mentions_spill):
+                out.append(Finding(
+                    "PL203",
+                    f"`page_table.pop` in `{name}` with no "
+                    f"`placement.unref` or spill extraction on any path "
+                    f"-- the popped request's pages leak",
+                    path, node.lineno))
+
+    # PL205: host-tiered spill that never pins
+    if cls in host_tier_classes and name and \
+            name.lower().startswith("spill") and not pins:
+        out.append(Finding(
+            "PL205",
+            f"`{cls}.{name}` spills on a host-tiered pool without "
+            f"pinning the blob bytes (`host.pin`); the host cache may "
+            f"drop live state", path, fn.lineno))
+
+
+def lint_ledger_protocol(files: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for path in files:
+        try:
+            with open(path) as fh:
+                src = fh.read()
+            tree = ast.parse(src, filename=path)
+        except (OSError, SyntaxError):
+            continue
+
+        # classes that touch self.host are host-tiered
+        host_tier: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Attribute) and \
+                            isinstance(sub.value, ast.Name) and \
+                            sub.value.id == "self" and sub.attr == "host":
+                        host_tier.add(node.name)
+                        break
+
+        acquires = releases = False
+        first_acquire_line = 0
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                if _is_placement_call(node, _ACQUIRE):
+                    if not acquires:
+                        first_acquire_line = node.lineno
+                    acquires = True
+                elif _is_placement_call(node, _RELEASE):
+                    releases = True
+
+        def walk_scope(scope, cls: Optional[str]):
+            for child in ast.iter_child_nodes(scope):
+                if isinstance(child, ast.ClassDef):
+                    walk_scope(child, child.name)
+                elif isinstance(child,
+                                (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    _check_function(child, path, host_tier, cls, out)
+                    walk_scope(child, cls)
+
+        walk_scope(tree, None)
+
+        # PL202: module acquires but never releases
+        if acquires and not releases:
+            out.append(Finding(
+                "PL202",
+                "module takes page references (placement.alloc/ref) but "
+                "contains no release site (placement.unref)",
+                path, first_acquire_line))
+    return apply_suppressions(out)

@@ -24,11 +24,35 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-__all__ = ["RecompileEvent", "WatchedFunction", "RecompileWatcher"]
+__all__ = ["RecompileEvent", "WatchedFunction", "RecompileWatcher",
+           "jit_sites", "site_compile_counts", "clear_jit_sites"]
 
 #: cap on reported changed-leaf entries per event (params trees are huge;
 #: the churn is invariably in the handful of data arguments)
 MAX_CHANGED = 20
+
+#: module-level registry of every live wrapped jit site (name -> shim).
+#: One source of truth for "which jit callables does the serving stack
+#: actually step": the smoke benches' ``--max-decode-recompiles`` gate and
+#: the jit-hazard linter both read this instead of re-discovering steppers.
+#: Later wraps under the same name shadow earlier ones (a rebuilt engine
+#: re-wraps its steppers); entries die with the process, not the engine.
+_JIT_SITES: Dict[str, "WatchedFunction"] = {}
+
+
+def jit_sites() -> Dict[str, "WatchedFunction"]:
+    """Snapshot of every wrapped jit site: name -> WatchedFunction shim."""
+    return dict(_JIT_SITES)
+
+
+def site_compile_counts() -> Dict[str, int]:
+    """name -> accumulated compile count, across every live wrap site."""
+    return {name: wfn.n_compiles for name, wfn in _JIT_SITES.items()}
+
+
+def clear_jit_sites() -> None:
+    """Forget all registered sites (test isolation)."""
+    _JIT_SITES.clear()
 
 
 def _describe(args: tuple, kwargs: dict) -> Dict[str, str]:
@@ -129,7 +153,9 @@ class RecompileWatcher:
         self.events: List[RecompileEvent] = []
 
     def wrap(self, fn, name: str) -> WatchedFunction:
-        return WatchedFunction(fn, name, self)
+        wfn = WatchedFunction(fn, name, self)
+        _JIT_SITES[name] = wfn
+        return wfn
 
     @property
     def n_events(self) -> int:

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,6 +71,10 @@ class ServeConfig:
     n_slabs: Optional[int] = None      # paged: state slabs (default 2B+1)
     byte_budget: Optional[int] = None  # paged: alternative to n_pages
     prefill_chunk: int = 128           # paged: longest full-seq prefill
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+                                       # paged: snap prefill lengths down to
+                                       # this bucket set (bounded compile
+                                       # count); tail streams through decode
     sampling: SamplingConfig = SamplingConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     seed: int = 0
@@ -103,6 +107,7 @@ class ServeConfig:
                      else 2 * self.batch + 1),
             byte_budget=self.byte_budget,
             prefill_chunk=self.prefill_chunk,
+            prefill_buckets=self.prefill_buckets,
             sampling=self.sampling,
             scheduler=self.scheduler,
             seed=self.seed,

@@ -244,7 +244,12 @@ class _EngineCore:
             for r in pending:
                 self.obs.lifecycle.interrupt(r.rid)
             return self.done + pending
+        self._sanitize_teardown()
         return self.done
+
+    def _sanitize_teardown(self) -> None:
+        """Shadow-ledger leak check after a full drain (REPRO_SANITIZE=1).
+        Paged engines override; the default engine has no page ledger."""
 
     def abort(self, rid: int) -> bool:
         """Cancel a request at any lifecycle point: waiting, mid-decode, or
@@ -382,7 +387,11 @@ class ServingEngine(_EngineCore):
         self.mesh_axes = mesh_axes
         B = ecfg.slots
         self.caches = M.init_decode_caches(cfg, B, ecfg.cache_capacity)
-        self.lengths = jnp.zeros((B,), jnp.int32)
+        # host-side mirror of per-slot lengths: the engine is the writer of
+        # record, so keeping it in numpy makes the step loop sync-free --
+        # it streams host->device with the decode call instead of being
+        # read back device->host every step (JH101)
+        self.lengths = np.zeros((B,), np.int32)
         self.cur_tokens = jnp.zeros((B,), jnp.int32)
         self.active = np.zeros((B,), bool)
         self.slot_req: List[Optional[Request]] = [None] * B
@@ -475,7 +484,7 @@ class ServingEngine(_EngineCore):
             self._finalize(req, "done")
             return                      # never occupies a decode slot
         self.cur_tokens = self.cur_tokens.at[slot].set(tok)
-        self.lengths = self.lengths.at[slot].set(S)
+        self.lengths[slot] = S
         self.active[slot] = True
         self.slot_req[slot] = req
         req.status = "running"
@@ -489,13 +498,14 @@ class ServingEngine(_EngineCore):
         t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, tokens=self.cur_tokens, caches=self.caches,
-            lengths=self.lengths, seed=jnp.int32(self.step_count))
+            lengths=jnp.asarray(self.lengths), seed=jnp.int32(self.step_count))
         self._key, toks = _sample_tokens(self._key, logits, self.ecfg.sampling)
-        self.lengths = self.lengths + jnp.asarray(self.active, jnp.int32)
+        self.lengths = self.lengths + self.active.astype(np.int32)
         self.cur_tokens = toks
+        # the sampled tokens are the step's single device->host sync; the
+        # lengths ledger lives host-side (see __init__) and needs none
         toks_np = np.asarray(toks)
-        # one host sync for the whole step, not one per slot
-        lengths_np = np.asarray(self.lengths)
+        lengths_np = self.lengths
         self._record_step(t0, time.perf_counter() - t0,
                           compiled=self.obs.recompiles.n_events > c0,
                           batch=int(self.active.sum()))
@@ -544,6 +554,14 @@ class PagedEngineConfig:
     byte_budget: Optional[int] = None  # alternative to n_pages
     prefill_chunk: int = 128          # longest full-sequence prefill; the
                                       # prompt tail streams through decode
+    # opt-in prefill length bucketing (JH103): when set, the full-sequence
+    # prefill length snaps down to the largest bucket <= the prompt length
+    # and the remainder streams through the decode batch, so the prefill
+    # jit compiles one executable per *bucket* instead of one per distinct
+    # prompt length.  Off by default: moving tokens from prefill to decode
+    # changes which op consumes which stochastic-rounding draw, so mx8
+    # token streams differ from the unbucketed engine (both are valid).
+    prefill_buckets: Optional[Tuple[int, ...]] = None
     sampling: SamplingConfig = SamplingConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     seed: int = 0
@@ -734,6 +752,22 @@ class PagedServingEngine(_EngineCore):
     def _free_row(self, rid: int):
         self.rows[self.rows.index(rid)] = None
 
+    def _bucket_prefill_len(self, n: int) -> int:
+        """Full-sequence prefill length for an ``n``-token prompt.
+
+        Unbucketed: ``min(n, prefill_chunk)`` -- one compiled prefill per
+        distinct prompt length.  With ``prefill_buckets``, snap down to the
+        largest bucket that fits (prompts shorter than every bucket keep
+        their exact length); the tail streams through the decode batch via
+        the existing pending mechanism."""
+        s0 = min(n, self.pcfg.prefill_chunk)
+        buckets = self.pcfg.prefill_buckets
+        if buckets:
+            fits = [b for b in buckets if 0 < b <= s0]
+            if fits:
+                s0 = max(fits)
+        return s0
+
     def _prefill_into(self, req: Request):
         nodes = self.pool.prefix_match(req.prompt)
         if nodes and self.pool.prefix_admit(req.rid, nodes):
@@ -742,13 +776,15 @@ class PagedServingEngine(_EngineCore):
         self.pool.note_prefix_miss()
         t_p0 = time.perf_counter()
         self.obs.lifecycle.phase(req.rid, "prefill", t=t_p0)
-        s0 = min(len(req.prompt), self.pcfg.prefill_chunk)
+        s0 = self._bucket_prefill_len(len(req.prompt))
         ok = self.pool.register(req.rid, pages_for(s0))
         assert ok, "admission checked capacity"
         # the whole prompt is fresh context: s0 through full-sequence
-        # prefill, the tail streamed through the decode batch
+        # prefill, the tail streamed through the decode batch.  With
+        # prefill_buckets set, s0 comes from a fixed bucket set, so the
+        # slice below feeds a bounded family of compiled shapes.
         self._count_prefill(len(req.prompt))
-        prompt = jnp.asarray(req.prompt[:s0], jnp.int32)[None]
+        prompt = jnp.asarray(req.prompt[:s0], jnp.int32)[None]  # lint: disable=JH103
         logits, row_caches = self._prefill(
             self.params, batch={"tokens": prompt, "targets": prompt})
         self.pool.insert_prefill(req.rid, row_caches)
@@ -966,6 +1002,13 @@ class PagedServingEngine(_EngineCore):
                        and req.output[-1] == req.eos_id)
             if len(req.output) >= req.max_new_tokens or hit_eos:
                 self._finish(rid)
+
+    def _sanitize_teardown(self) -> None:
+        # only assert once the spill set is empty: engine-held
+        # SpilledRequest objects legitimately own shared pages mid-flight
+        if not self.spilled:
+            self.pool.sanitizer_check_leaks(
+                what=f"drained paged engine (step {self.step_count})")
 
     # ------------- stats -------------
 

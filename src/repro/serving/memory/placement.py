@@ -79,6 +79,17 @@ class BankAwarePlacement:
         #: ``pages_alloc_total`` / ``pages_freed_total`` /
         #: ``page_refs_total`` counters and the ``pages_live`` gauge
         self.metrics = None
+        #: shadow-ledger sanitizer (``REPRO_SANITIZE=1``): an independent
+        #: refcount mirror that raises SanitizerError on double-free,
+        #: ref-on-free, free-with-sharers, double-alloc, use-after-evict,
+        #: and teardown leaks.  Lazy import: runtime.py is stdlib-only and
+        #: must not be paid for when the sanitizer is off.
+        self._shadow = None
+        import os as _os
+        if _os.environ.get("REPRO_SANITIZE", "").strip() not in \
+                ("", "0", "false"):
+            from repro.analysis.lint import runtime as _rt
+            _rt.attach(self)
 
     # ------------- allocation -------------
 
@@ -103,6 +114,8 @@ class BankAwarePlacement:
         self._n_free -= n
         for pid in out:
             self._refs[pid] = 1
+        if self._shadow is not None:
+            self._shadow.on_alloc(out)
         if self.metrics is not None:
             self.metrics.counter("pages_alloc_total").inc(n)
             self.metrics.gauge("pages_live").set(self.n_usable - self._n_free)
@@ -110,6 +123,8 @@ class BankAwarePlacement:
 
     def ref(self, pages: Sequence[int]):
         """Take one extra (copy-on-write) reference on each page."""
+        if self._shadow is not None:
+            self._shadow.on_ref(pages)
         for pid in pages:
             assert self._refs.get(pid, 0) >= 1, f"ref on free page {pid}"
             self._refs[pid] += 1
@@ -123,6 +138,8 @@ class BankAwarePlacement:
     def unref(self, pages: Sequence[int]) -> List[int]:
         """Drop one reference per page; pages whose count hits zero return to
         the free list.  Returns the page ids actually freed."""
+        if self._shadow is not None:
+            self._shadow.pre_unref(pages)
         freed: List[int] = []
         for pid in pages:
             n = self._refs[pid] - 1
@@ -135,6 +152,8 @@ class BankAwarePlacement:
             self._live[c] -= 1
             freed.append(pid)
         self._n_free += len(freed)
+        if self._shadow is not None:
+            self._shadow.on_unref(pages, freed)
         if self.metrics is not None and freed:
             self.metrics.counter("pages_freed_total").inc(len(freed))
             self.metrics.gauge("pages_live").set(self.n_usable - self._n_free)

@@ -119,7 +119,7 @@ class PagedStatePool:
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         # dense-gather reference path (parity tests; never donates, so
         # callers may hold pool snapshots around a reference step)
-        self._decode_gather = jax.jit(self._decode_gather_impl)
+        self._decode_gather = jax.jit(self._decode_gather_impl)  # lint: disable=JH104
         self._insert = jax.jit(self.paging.insert_request,
                                donate_argnums=(0,))
         self._extract = jax.jit(self.paging.extract_request)
@@ -395,7 +395,15 @@ class PagedStatePool:
         npg = max([len(self.page_table[r]) for r in rids if r is not None],
                   default=1)
         npg = bucket_pages(npg)
-        bt = np.zeros((len(rids), npg), np.int32)
+        # rows dim is the fixed decode-batch width and the page dim is
+        # power-of-2 bucketed, so the trace set is bounded by design
+        bt = np.zeros((len(rids), npg), np.int32)  # lint: disable=JH103
+        shadow = getattr(self.placement, "_shadow", None)
+        if shadow is not None:   # PL254: every addressed page must be live
+            shadow.check_live(
+                {pid for r in rids if r is not None
+                 for pid in self.page_table[r]},
+                what=f"block table for rids {[r for r in rids if r is not None]}")
         for i, r in enumerate(rids):
             if r is not None:
                 pages = self.page_table[r]
@@ -443,6 +451,25 @@ class PagedStatePool:
         """Fraction of usable pages currently pinned."""
         used = self.usable_pages - self.free_pages
         return used / max(self.usable_pages, 1)
+
+    # ------------------------------------------------------------------
+    # shadow-ledger sanitizer (REPRO_SANITIZE=1)
+    # ------------------------------------------------------------------
+
+    def sanitizer_owned_pages(self) -> set:
+        """Every page some owner can still account for: resident request
+        block tables here; tiered pools add staged prefetches and resident
+        prefix-store nodes.  Spilled requests' shared pages are owned by
+        the engine-held SpilledRequest, so teardown checks only run once
+        the engine has fully drained."""
+        return {pid for pages in self.page_table.values() for pid in pages}
+
+    def sanitizer_check_leaks(self, what: str = "engine teardown") -> None:
+        """``PL255``: raise if the shadow ledger sees live pages no owner
+        accounts for.  No-op unless ``REPRO_SANITIZE=1`` attached a ledger."""
+        shadow = getattr(self.placement, "_shadow", None)
+        if shadow is not None:
+            shadow.assert_no_leaks(self.sanitizer_owned_pages(), what=what)
 
     @property
     def shared_page_savings(self) -> int:

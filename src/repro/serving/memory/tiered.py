@@ -435,6 +435,16 @@ class TieredStatePool(PagedStatePool):
         self._tier_instant("tier.evict", node=node.node_id)
         self._sync_host_gauge()
 
+    def sanitizer_owned_pages(self) -> set:
+        """Base owners plus staged prefetch pages and resident prefix-store
+        nodes (the store holds one placement ref per resident node)."""
+        owned = super().sanitizer_owned_pages()
+        for st in self._staged.values():
+            owned.update(st.pages)
+        if self.store is not None:
+            owned.update(self.store.resident_pages())
+        return owned
+
     def _enforce_store_capacity(self) -> None:
         over = self.store.over_capacity()
         while over > 0:

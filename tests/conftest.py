@@ -6,6 +6,12 @@ import os
 # (see test_sharding.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Tier-1 runs with the shadow-ledger sanitizer on: every refcount transition
+# in the paged/tiered pools is mirrored and double-free / use-after-evict /
+# teardown-leak raise immediately (repro.analysis.lint.runtime).  Opt out of
+# an individual run with REPRO_SANITIZE=0.
+os.environ.setdefault("REPRO_SANITIZE", "1")
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,479 @@
+"""repro.analysis.lint: jit-hazard rules, ledger protocol rules, registry
+contracts, and the runtime shadow-ledger sanitizer.
+
+Every JH/PL/RC code gets a positive (fires) and a negative (stays quiet)
+case; the runtime half injects a deliberate double-unref and a teardown
+leak into a real pool and requires the sanitizer to catch both.
+"""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (RULES, SanitizerError, ShadowLedger,
+                                 baseline_diff, run_lint)
+from repro.analysis.lint.findings import (Finding, counts_by_code,
+                                          suppressed_codes)
+from repro.analysis.lint.jit_hazards import lint_jit_hazards
+from repro.analysis.lint.ledger import lint_ledger_protocol
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+def _lint_snippet(tmp_path, source, pass_fn):
+    p = tmp_path / "snippet.py"
+    p.write_text(textwrap.dedent(source))
+    return pass_fn([str(p)])
+
+
+# ---------------------------------------------------------------------------
+# pass 1: jit hazards -- positive and negative per rule
+# ---------------------------------------------------------------------------
+
+JH_CASES = {
+    "JH101": (
+        """
+        import jax
+        import numpy as np
+        def decode_step(fn, xs):
+            out = []
+            for x in xs:
+                out.append(np.asarray(x))
+            return out
+        step = jax.jit(decode_step)
+        """,
+        """
+        import jax
+        import numpy as np
+        def decode_step(fn, xs):
+            ys = fn(xs)
+            ys_np = np.asarray(ys)
+            return list(ys_np)
+        step = jax.jit(decode_step)
+        """,
+    ),
+    "JH102": (
+        """
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """,
+        """
+        import jax
+        @jax.jit
+        def f(x):
+            if x.shape[0] > 0:
+                return x
+            return -x
+        """,
+    ),
+    "JH103": (
+        """
+        import jax
+        import numpy as np
+        step = jax.jit(lambda t: t)
+        def build_table(rids, table):
+            npg = max(len(table[r]) for r in rids)
+            return np.zeros((len(rids), npg), np.int32)
+        """,
+        """
+        import jax
+        import numpy as np
+        step = jax.jit(lambda t: t)
+        def build_table(n_rows, n_pages):
+            return np.zeros((n_rows, n_pages), np.int32)
+        """,
+    ),
+    "JH104": (
+        """
+        import jax
+        def decode_impl(params, pools, tokens):
+            return pools
+        step = jax.jit(decode_impl)
+        """,
+        """
+        import jax
+        def decode_impl(params, pools, tokens):
+            return pools
+        step = jax.jit(decode_impl, donate_argnums=(1,))
+        """,
+    ),
+    "JH105": (
+        """
+        import jax
+        @jax.jit
+        def g(tree):
+            return {k: tree for k in set(("a", "b"))}
+        """,
+        """
+        import jax
+        @jax.jit
+        def g(tree, names):
+            return {k: tree for k in sorted(names)}
+        """,
+    ),
+    "JH106": (
+        """
+        import jax
+        class Eng:
+            def __init__(self):
+                self.scale = 1.0
+            def rescale(self):
+                self.scale = 2.0
+            def step_fn(self, x):
+                return x * self.scale
+            def build(self):
+                return jax.jit(self.step_fn)
+        """,
+        """
+        import jax
+        class Eng:
+            def __init__(self):
+                self.scale = 1.0
+            def step_fn(self, x):
+                return x * self.scale
+            def build(self):
+                return jax.jit(self.step_fn)
+        """,
+    ),
+}
+
+
+@pytest.mark.parametrize("code", sorted(JH_CASES))
+def test_jit_hazard_rule(code, tmp_path):
+    pos, neg = JH_CASES[code]
+    hits = _lint_snippet(tmp_path / "pos", pos, lint_jit_hazards)
+    assert code in _codes(hits), f"{code} should fire on the positive case"
+    (tmp_path / "pos" / "snippet.py").unlink()
+    quiet = _lint_snippet(tmp_path / "neg", neg, lint_jit_hazards)
+    assert code not in _codes(quiet), \
+        f"{code} must stay quiet on the negative case: {quiet}"
+
+
+def _mkdirs(tmp_path):
+    for d in ("pos", "neg"):
+        (tmp_path / d).mkdir(exist_ok=True)
+
+
+@pytest.fixture(autouse=True)
+def _fixture_dirs(tmp_path):
+    _mkdirs(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# pass 2 (static): ledger protocol -- positive and negative per rule
+# ---------------------------------------------------------------------------
+
+PL_CASES = {
+    "PL201": (
+        """
+        def claim(placement, table, rid, n):
+            pages = placement.alloc(n)
+            table[rid] = pages
+            placement.unref(pages)
+        """,
+        """
+        def claim(placement, table, rid, n):
+            pages = placement.alloc(n)
+            if pages is None:
+                return False
+            table[rid] = pages
+            placement.unref(pages)
+            return True
+        """,
+    ),
+    "PL202": (
+        """
+        def claim(placement, n):
+            pages = placement.alloc(n)
+            if pages is None:
+                return None
+            return pages
+        """,
+        """
+        def claim(placement, n):
+            pages = placement.alloc(n)
+            if pages is None:
+                return None
+            return pages
+        def drop(placement, pages):
+            placement.unref(pages)
+        """,
+    ),
+    "PL203": (
+        """
+        class Pool:
+            def release(self, rid):
+                pages = self.page_table.pop(rid)
+                return len(pages)
+        """,
+        """
+        class Pool:
+            def release(self, rid):
+                pages = self.page_table.pop(rid)
+                self.placement.unref(pages)
+                return len(pages)
+        """,
+    ),
+    "PL204": (
+        """
+        def drop(placement, pages):
+            placement.free(pages)
+        """,
+        """
+        def drop(placement, pages):
+            placement.unref(pages)
+        """,
+    ),
+    "PL205": (
+        """
+        class Tiered:
+            def spill(self, rid, length):
+                blob = self.extract(rid)
+                self.host.cache_add(len(blob))
+                return blob
+        """,
+        """
+        class Tiered:
+            def spill(self, rid, length):
+                blob = self.extract(rid)
+                self.host.pin(rid, len(blob))
+                return blob
+        """,
+    ),
+}
+
+
+@pytest.mark.parametrize("code", sorted(PL_CASES))
+def test_ledger_rule(code, tmp_path):
+    pos, neg = PL_CASES[code]
+    hits = _lint_snippet(tmp_path / "pos", pos, lint_ledger_protocol)
+    assert code in _codes(hits), f"{code} should fire on the positive case"
+    quiet = _lint_snippet(tmp_path / "neg", neg, lint_ledger_protocol)
+    assert code not in _codes(quiet), \
+        f"{code} must stay quiet on the negative case: {quiet}"
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline ratchet
+# ---------------------------------------------------------------------------
+
+def test_suppression_comment(tmp_path):
+    src = """
+    def drop(placement, pages):
+        placement.free(pages)  # lint: disable=PL204
+    """
+    assert _lint_snippet(tmp_path / "pos", src, lint_ledger_protocol) == []
+
+
+def test_suppression_preceding_line():
+    lines = ["x = 1\n", "# lint: disable=JH101, PL204\n", "y = 2\n"]
+    assert suppressed_codes(lines, 3) == {"JH101", "PL204"}
+    assert suppressed_codes(lines, 1) == set()
+
+
+def test_baseline_ratchet():
+    f = [Finding("JH101", "m", "a.py", 1), Finding("JH101", "m", "a.py", 9),
+         Finding("PL204", "m", "b.py", 2)]
+    assert counts_by_code(f) == {"JH101": 2, "PL204": 1}
+    over, room = baseline_diff(f, {"JH101": 2, "PL204": 2, "RC301": 1})
+    assert over == {}                       # nothing above baseline
+    assert room == {"PL204": 1, "RC301": 1}
+    over, _ = baseline_diff(f, {"JH101": 1})
+    assert over == {"JH101": 1, "PL204": 1}
+
+
+def test_every_rule_documented():
+    for code in RULES:
+        title, hint = RULES[code]
+        assert title and hint
+    covered = set(JH_CASES) | set(PL_CASES) | \
+        {"PL250", "PL251", "PL252", "PL253", "PL254", "PL255"} | \
+        {"RC301", "RC302", "RC303", "RC304", "RC305"}
+    assert covered == set(RULES), "every rule needs a test case"
+
+
+def test_repo_is_lint_clean():
+    """The committed tree carries no unsuppressed static findings -- the
+    same gate CI's lint job enforces via the (empty) baseline."""
+    findings = run_lint([_SRC], include_contracts=False)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# runtime shadow ledger (PL25x)
+# ---------------------------------------------------------------------------
+
+def _raises_code(code):
+    return pytest.raises(SanitizerError, match=f"^{code}")
+
+
+def test_shadow_unit_transitions():
+    led = ShadowLedger(n_pages=8)
+    led.on_alloc([1, 2])
+    with _raises_code("PL253"):
+        led.on_alloc([2])                    # double-alloc
+    led.on_ref([1])
+    with _raises_code("PL250"):
+        led.on_ref([5])                      # ref on free page
+    with _raises_code("PL252"):
+        led.on_unref([1], freed=[1])         # freed with a live sharer
+    led2 = ShadowLedger()
+    led2.on_alloc([3])
+    led2.on_unref([3], freed=[3])
+    with _raises_code("PL251"):
+        led2.on_unref([3], freed=[3])        # double-free
+    led3 = ShadowLedger()
+    led3.on_alloc([4, 5])
+    with _raises_code("PL254"):
+        led3.check_live([4, 9])              # use-after-evict
+    with _raises_code("PL255"):
+        led3.assert_no_leaks(expected_live=[4])   # 5 is an orphan
+    led3.assert_no_leaks(expected_live=[4, 5])
+
+
+@pytest.fixture(scope="module")
+def sanitized_pool():
+    os.environ["REPRO_SANITIZE"] = "1"       # conftest default, made explicit
+    from repro.configs import get_smoke_config
+    from repro.serving.memory import PagedStatePool
+    cfg = get_smoke_config("llama3.2-1b")
+    return PagedStatePool(cfg, n_pages=9, n_slabs=5)
+
+
+def test_pool_double_unref_caught(sanitized_pool):
+    pool = sanitized_pool
+    assert pool.placement._shadow is not None, "sanitizer must be attached"
+    assert pool.register(70, 2)
+    pages = list(pool.page_table[70])
+    pool.release(70)                         # legitimate release
+    with _raises_code("PL251"):
+        pool.placement.unref(pages)          # injected double-unref
+
+
+def test_pool_use_after_evict_caught(sanitized_pool):
+    pool = sanitized_pool
+    assert pool.register(71, 2)
+    stale = list(pool.page_table[71])
+    pool.placement.unref(stale)              # pages freed under the table
+    with _raises_code("PL254"):
+        pool.block_table([71])
+    # repair the pool for subsequent tests: drop the dangling entry
+    pool.page_table.pop(71)
+    pool._free_slabs.append(pool.slab_of.pop(71))
+
+
+def test_pool_teardown_leak_caught(sanitized_pool):
+    pool = sanitized_pool
+    assert pool.register(72, 2)
+    pool.page_table.pop(72)                  # injected leak: pages orphaned
+    with _raises_code("PL255"):
+        pool.sanitizer_check_leaks()
+    # repair: re-own and release cleanly, then the check passes
+    leaked = pool.placement._shadow.live_pages()
+    pool.placement.unref(leaked)
+    pool._free_slabs.append(pool.slab_of.pop(72))
+    pool.sanitizer_check_leaks()
+
+
+def test_clean_lifecycle_passes_sanitizer(sanitized_pool):
+    pool = sanitized_pool
+    assert pool.register(73, 3)
+    assert pool.grow(73, 1)
+    pool.release(73)
+    pool.sanitizer_check_leaks()
+
+
+# ---------------------------------------------------------------------------
+# pass 3: registry contracts (RC3xx)
+# ---------------------------------------------------------------------------
+
+def _broken_registry(monkeypatch, *ops):
+    from repro.ops import registry
+    patched = dict(registry._REGISTRY)
+    for op in ops:
+        for fmt in op.formats:
+            patched[(op.kind, op.backend, fmt, op.layout)] = op
+    monkeypatch.setattr(registry, "_REGISTRY", patched)
+
+
+def test_contracts_clean_on_real_registry():
+    from repro.analysis.lint.contracts import lint_registry_contracts
+    findings = lint_registry_contracts()
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_contract_missing_impl_and_twin(monkeypatch):
+    from repro.analysis.lint.contracts import lint_registry_contracts
+    from repro.ops.base import SpuOp
+
+    class _Hollow(SpuOp):
+        kind = "state_update"
+        backend = "pallas"
+        formats = ("_lint_fake",)
+        layout = "dense"
+
+    _broken_registry(monkeypatch, _Hollow())
+    codes = _codes(lint_registry_contracts())
+    assert "RC301" in codes                  # no execute/traffic override
+    assert "RC304" in codes                  # pallas without a jnp twin
+
+
+def test_contract_invalid_traffic(monkeypatch):
+    from repro.analysis.lint.contracts import lint_registry_contracts
+    from repro.ops.base import SpuOp, TrafficBytes
+
+    class _Negative(SpuOp):
+        kind = "state_update"
+        backend = "jnp"
+        formats = ("_lint_fake",)
+        layout = "dense"
+
+        def execute(self, state, inputs, plan):
+            return state, None
+
+        def traffic(self, plan):
+            return TrafficBytes(state_read=-1.0)
+
+    _broken_registry(monkeypatch, _Negative())
+    codes = _codes(lint_registry_contracts())
+    assert "RC302" in codes
+
+
+def test_contract_page_alignment(monkeypatch):
+    from repro.analysis.lint.contracts import lint_registry_contracts
+    from repro.ops.base import SpuOp, TrafficBytes
+
+    class _Unaligned(SpuOp):
+        kind = "attn_decode"
+        backend = "jnp"
+        formats = ("_lint_fake",)
+        layout = "paged"
+
+        def execute(self, state, inputs, plan):
+            return state, None
+
+        def traffic(self, plan):
+            # token-granular state reads: illegal for a paged op
+            return TrafficBytes(state_read=float(plan.dim("T")))
+
+    _broken_registry(monkeypatch, _Unaligned())
+    codes = _codes(lint_registry_contracts())
+    assert "RC303" in codes
+
+
+def test_contract_config_coverage(monkeypatch):
+    from repro import configs
+    from repro.analysis.lint.contracts import lint_registry_contracts
+    monkeypatch.setattr(configs, "ALL_ARCHS",
+                        list(configs.ALL_ARCHS) + ["_lint_bogus_arch"])
+    findings = [f for f in lint_registry_contracts() if f.code == "RC305"]
+    assert findings and "_lint_bogus_arch" in findings[0].message

@@ -223,3 +223,18 @@ def test_attention_decode_step_unifies_gqa_and_mla():
                                                  cfg, scale=0.1, seed=0)
     assert out_m.shape == (B, 4, 64)
     assert OPS.attn_kind_of(mla_cache) == "mla_decode"
+
+
+# ---------------------------------------------------------------------------
+# registry contract checker (repro.analysis.lint pass 3)
+# ---------------------------------------------------------------------------
+
+def test_registry_satisfies_lint_contracts():
+    """Every registered quadruple passes the RC3xx contract checker: protocol
+    overrides, sane non-negative traffic, page-granular paged state streams,
+    a jnp twin per pallas op, and decode_op_plans coverage of every config.
+    An op registered with an inconsistent traffic descriptor fails tier-1
+    here, not just the lint CLI."""
+    from repro.analysis.lint.contracts import lint_registry_contracts
+    findings = lint_registry_contracts()
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -216,6 +216,32 @@ def test_paged_engine_mixed_workload_matches_greedy(tiny_fp32):
     assert "p99_ttft_s" in stats and "p50_tok_latency_s" in stats
 
 
+def test_paged_engine_prefill_buckets(tiny_fp32):
+    """Opt-in prefill bucketing (the JH103 lint-finding fix): snapping the
+    full-sequence prefill length down to a fixed bucket set must not change
+    greedy outputs -- the prompt tail streams through the bit-exact decode
+    pending path -- while collapsing one-prefill-compile-per-prompt-length
+    to one per bucket."""
+    params, cfg = tiny_fp32
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (9, 11, 13, 42, 44, 46)]
+    refs = _reference_outputs(params, cfg, prompts, 4)
+
+    eng = PagedServingEngine(params, cfg, PagedEngineConfig(
+        max_decode_batch=3, n_pages=9, n_slabs=7, prefill_chunk=128,
+        prefill_buckets=(8, 32, 128)))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    for r in done:
+        assert r.output == refs[r.rid], (r.rid, r.output, refs[r.rid])
+    # six distinct prompt lengths, but only two buckets actually prefill
+    # (9-13 -> 8, 42-46 -> 32): the compile count follows the bucket set
+    assert eng.obs.recompiles.counts().get("engine.prefill", 0) <= 2
+
+
 def test_paged_engine_growth_preemption_e2e(tiny_fp32):
     """Pool too small for both requests' full contexts: one must be evicted
     when the other's block table grows, then resume and still produce the
