@@ -1,0 +1,205 @@
+"""Chaos smoke (CI tier 2): a fixed-seed fault plan under a real workload.
+
+Runs the same two workloads clean and faulted and enforces the resilience
+layer's whole contract in one shot:
+
+  * every request reaches a terminal status (``done`` / ``failed`` /
+    ``rejected`` / ``truncated``) -- injected faults never wedge or kill
+    the engine;
+  * non-faulted requests decode **bit-identically** to the clean run
+    (greedy sampling), including a corrupted spill blob recovered by
+    re-prefill;
+  * zero cost when disabled: with ``fault_plan=None`` the resilience layer
+    installs nothing (no plan, no NaN guard, no watchdog) and two clean
+    runs take the identical number of engine steps;
+  * the decode step stays inside the pinned recompile budget in both
+    modes (the fault hooks must not retrace anything);
+  * run under ``REPRO_SANITIZE=1`` the shadow ledger raises on any leak a
+    fault path forgot to clean up (CI sets it; the run works either way).
+
+Reproduce any CI chaos run locally from its seed::
+
+    PYTHONPATH=src REPRO_SANITIZE=1 python benchmarks/chaos_smoke.py \
+        --seed 0 --trace chaos_trace.json
+    PYTHONPATH=src python -m repro.obs.schema chaos_trace.json \
+        --require steps,resilience
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+#: the fixed plan: one transient alloc failure (retried), one poisoned
+#: request (quarantined), one slow step (watchdog), and -- in the
+#: preemption workload -- one corrupted spill blob (re-prefilled)
+BATCH_PLAN = "alloc:nth=1;nan:rid=2;slow_step:step=4,ms=10"
+PREEMPT_PLAN = "blob_corrupt:nth=1"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fault-plan + workload seed (printed by CI; rerun "
+                         "with the same value to reproduce a failure)")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--trace", default="",
+                    help="write the faulted batch run's Chrome trace here "
+                         "(validate with repro.obs.schema --require "
+                         "resilience)")
+    ap.add_argument("--max-decode-recompiles", type=int, default=1,
+                    help="fail if the paged decode step compiled more than "
+                         "this many times across every run (fault hooks "
+                         "must not retrace)")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core.state_update import StateQuantConfig
+    from repro.models import model as M
+    from repro.serving.api import Engine, ServeConfig
+    from repro.serving.engine import TERMINAL_STATUSES
+    from repro.serving.sampler import SamplingConfig
+    from repro.serving.scheduler import SchedulerConfig
+
+    if os.environ.get("REPRO_SANITIZE", "").strip() in ("", "0", "false"):
+        print("note: REPRO_SANITIZE is off; CI runs this smoke with the "
+              "shadow-ledger sanitizer enabled")
+
+    cfg = get_smoke_config(args.arch).with_(
+        state_quant=StateQuantConfig(fmt="fp32", rounding="nearest",
+                                     backend="jnp"))
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    greedy = SamplingConfig(temperature=0.0)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (10, 14, 18, 22)]
+    failures = []
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+            print(f"FAIL: {msg}", file=sys.stderr)
+
+    # ---- workload 1: decode batch, clean vs faulted ---------------------
+    def run_batch(fault_plan=None):
+        eng = Engine(params, cfg, ServeConfig(
+            backend="paged", batch=2, n_pages=17, n_slabs=5,
+            sampling=greedy, seed=args.seed, fault_plan=fault_plan,
+            step_budget_s=5e-3 if fault_plan else None))
+        hs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        eng.run()
+        return eng, hs
+
+    eng_clean, hs_clean = run_batch()
+    base = [h.output for h in hs_clean]
+    clean_steps = eng_clean.engine.step_count
+    check(all(h.status == "done" for h in hs_clean),
+          "clean batch run did not finish every request")
+    check(eng_clean.engine.faults is None
+          and not eng_clean.engine._nan_guard
+          and not eng_clean.engine.watchdog.enabled,
+          "fault_plan=None must install no plan, NaN guard, or watchdog")
+
+    # zero cost when disabled: an identical clean run takes the identical
+    # number of engine steps (no hidden retries, no extra syncs)
+    eng_clean2, hs_clean2 = run_batch()
+    check(eng_clean2.engine.step_count == clean_steps,
+          f"clean step count drifted: {clean_steps} vs "
+          f"{eng_clean2.engine.step_count}")
+    check([h.output for h in hs_clean2] == base,
+          "clean rerun is not bit-identical")
+
+    eng_f, hs_f = run_batch(BATCH_PLAN)
+    statuses = [h.status for h in hs_f]
+    check(all(s in TERMINAL_STATUSES for s in statuses),
+          f"non-terminal statuses under faults: {statuses}")
+    check(hs_f[2].status == "failed",
+          f"poisoned rid 2 should be quarantined, got {hs_f[2].status}")
+    for i in (0, 1, 3):
+        check(hs_f[i].status == "done" and hs_f[i].output == base[i],
+              f"non-faulted rid {i} diverged from the clean run")
+    plan = eng_f.engine.faults
+    m_f = eng_f.obs.metrics
+    check(plan.total_injected >= 3,
+          f"expected >=3 injected faults, got {plan.injected}")
+    check(m_f.value("faults_recovered_total", site="alloc") >= 1,
+          "transient alloc was not recovered")
+    check(eng_f.engine.watchdog.trips >= 1,
+          "slow step did not trip the watchdog")
+    if args.trace:
+        eng_f.obs.tracer.save(args.trace)
+        print(f"trace -> {args.trace}")
+
+    from repro.obs import recompile as RC
+    batch_decode_compiles = RC.site_compile_counts().get("pool.decode", 0)
+
+    # ---- workload 2: preempt + corrupted spill blob ---------------------
+    def run_preempt(fault_plan=None):
+        long_p = rng_p.integers(0, cfg.vocab_size, 140).astype(np.int32)
+        short_p = rng_p.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng = Engine(params, cfg, ServeConfig(
+            backend="paged", batch=1, n_pages=9, n_slabs=5, sampling=greedy,
+            scheduler=SchedulerConfig(policy="priority"), seed=args.seed,
+            fault_plan=fault_plan))
+        hb = eng.submit(long_p, max_new_tokens=8, priority=5)
+        while hb.status == "queued" and eng.step():
+            pass
+        ha = eng.submit(short_p, max_new_tokens=6, priority=0)
+        eng.engine._preempt(hb.rid)
+        eng.run()
+        return eng, ha, hb
+
+    rng_p = np.random.default_rng(args.seed + 1)
+    _, _, hb_ref = run_preempt()
+    rng_p = np.random.default_rng(args.seed + 1)
+    eng_p, ha_p, hb_p = run_preempt(PREEMPT_PLAN)
+    check(ha_p.status == "done" and hb_p.status == "done",
+          f"preempt workload under {PREEMPT_PLAN!r}: "
+          f"{ha_p.status}/{hb_p.status}")
+    check(hb_p.output == hb_ref.request.output,
+          "re-prefill after blob corruption is not bit-exact")
+    check(eng_p.obs.metrics.value("blob_corruptions_total") >= 1,
+          "injected blob corruption went undetected")
+    check(eng_p.engine.pool.host.pinned_bytes == 0,
+          "host pin ledger not drained after recovery")
+
+    # ---- recompile budget, per decode batch shape -----------------------
+    # the two workloads legitimately compile one decode each (batch=2 and
+    # batch=1); the budget binds *within* each, clean and faulted alike
+    preempt_decode_compiles = (RC.site_compile_counts().get("pool.decode", 0)
+                               - batch_decode_compiles)
+    for what, n in (("batch workload", batch_decode_compiles),
+                    ("preempt workload", preempt_decode_compiles)):
+        check(n <= args.max_decode_recompiles,
+              f"{what}: decode compiled {n}x "
+              f"(budget {args.max_decode_recompiles}): a fault hook "
+              f"retraced")
+    decode_compiles = batch_decode_compiles + preempt_decode_compiles
+
+    injected = dict(plan.injected)
+    recovered = int(m_f.value("faults_recovered_total", site="alloc")
+                    + eng_p.obs.metrics.value("faults_recovered_total",
+                                              site="blob_corrupt"))
+    n_failed = sum(1 for s in statuses if s == "failed")
+    goodput_clean = sum(1 for h in hs_clean if h.status == "done"
+                        ) / len(hs_clean)
+    goodput_faulted = sum(1 for s in statuses if s == "done") / len(statuses)
+    print(f"chaos seed={args.seed} plan={BATCH_PLAN!r}+{PREEMPT_PLAN!r}")
+    print(f"  injected={injected} recovered={recovered} failed={n_failed}")
+    print(f"  goodput clean={goodput_clean:.2f} "
+          f"faulted={goodput_faulted:.2f}")
+    print(f"  clean steps={clean_steps} (stable across reruns), "
+          f"decode compiles={decode_compiles}")
+    if failures:
+        print(f"{len(failures)} chaos check(s) failed "
+              f"(reproduce: --seed {args.seed})", file=sys.stderr)
+        return 1
+    print("OK: batch survived every injected fault; "
+          "non-faulted requests bit-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -487,10 +487,66 @@ def serving_shared_prefix():
     _dump_serving_artifact()
 
 
+def serving_chaos():
+    """Goodput under a fixed-seed fault plan vs the clean run.  The hard
+    gate (bit-exact non-faulted requests, zero-cost-when-disabled, trace
+    schema) lives in benchmarks/chaos_smoke.py / CI's Chaos step; this row
+    records the headline resilience numbers into BENCH_serving.json."""
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.api import Engine, ServeConfig
+    from repro.serving.sampler import SamplingConfig
+    cfg = get_smoke_config("mamba2-2.7b")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (10, 14, 18, 22)]
+    plan = "alloc:nth=1;nan:rid=2;slow_step:step=4,ms=10"
+
+    def run(fault_plan=None):
+        eng = Engine(params, cfg, ServeConfig(
+            backend="paged", batch=2, n_pages=17, n_slabs=5,
+            sampling=SamplingConfig(temperature=0.0), fault_plan=fault_plan,
+            step_budget_s=5e-3 if fault_plan else None))
+        hs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run()
+        return eng, hs, time.perf_counter() - t0
+
+    eng_c, hs_c, dt_c = run()
+    eng_f, hs_f, dt_f = run(plan)
+    toks_c = sum(len(h.output) for h in hs_c)
+    toks_f = sum(len(h.output) for h in hs_f)
+    goodput_c = sum(1 for h in hs_c if h.status == "done") / len(hs_c)
+    goodput_f = sum(1 for h in hs_f if h.status == "done") / len(hs_f)
+    m_f = eng_f.obs.metrics
+    injected = dict(eng_f.engine.faults.injected)
+    recovered = m_f.family_total("faults_recovered_total")
+    st_f = eng_f.stats()
+    SERVING_ARTIFACT["chaos"] = {
+        "fault_plan": plan, "seed": 0,
+        "goodput_clean": goodput_c, "goodput_faulted": goodput_f,
+        "tokens_per_s_clean": toks_c / max(dt_c, 1e-9),
+        "tokens_per_s_faulted": toks_f / max(dt_f, 1e-9),
+        "faults_injected": injected,
+        "faults_recovered": recovered,
+        "requests_failed": st_f["requests_failed"],
+        "requests_rejected": st_f["requests_rejected"],
+        "quarantines": m_f.value("quarantines_total"),
+        "watchdog_trips": m_f.value("watchdog_trips_total"),
+    }
+    emit("serving/chaos", dt_f / max(toks_f, 1) * 1e6,
+         f"goodput_clean={goodput_c:.2f};goodput_faulted={goodput_f:.2f};"
+         f"injected={sum(injected.values())};recovered={recovered:.0f};"
+         f"failed={st_f['requests_failed']:.0f}")
+    _dump_serving_artifact()
+
+
 BENCHES = [fig3_latency_breakdown, fig4_swamping, fig5a_pim_designs,
            fig6_area_accuracy, fig12_generation, fig13_latency_reduction,
            fig15_latency_memory, kernel_state_update, kernel_attention,
-           serving_throughput, serving_open_loop, serving_shared_prefix]
+           serving_throughput, serving_open_loop, serving_shared_prefix,
+           serving_chaos]
 
 
 def main() -> None:

@@ -65,6 +65,11 @@ RULES: Dict[str, Tuple[str, str]] = {
     "PL205": ("spill-without-host-pin",
               "a tiered spill must pin the blob's bytes in the host ledger "
               "(live state may never be dropped); call host.pin"),
+    "PL206": ("alloc-without-retry-escalation",
+              "pool.register/grow/resume/fork and host.pin can fail "
+              "transiently under pressure; wrap the call in a bounded "
+              "retry / degradation path (retry_transient or an "
+              "escalation wrapper), never assume success"),
     # --- pass 2: page-ledger protocol (runtime shadow ledger) ----------
     "PL250": ("ref-on-free-page",
               "taking a reference on a page that is not live "

@@ -19,7 +19,11 @@ when it goes through something called ``placement``, e.g.
     copy-on-write sharers require ``unref``;
   * ``PL205`` a ``spill`` method on a host-tiered class (one that touches
     ``self.host``) that never pins the blob bytes -- live state must not
-    be droppable from the host cache.
+    be droppable from the host cache;
+  * ``PL206`` a transient-failure allocation call (``pool.register`` /
+    ``grow``/``resume``/``fork``, ``host.pin``) outside any bounded
+    retry / degradation wrapper -- these return falsy under pressure and
+    the caller must escalate, not assume success.
 """
 from __future__ import annotations
 
@@ -30,6 +34,51 @@ from repro.analysis.lint.findings import Finding, apply_suppressions
 
 _ACQUIRE = {"alloc", "ref"}
 _RELEASE = {"unref"}
+
+#: transient-failure allocation sites: (receiver name, attr names)
+_TRANSIENT_SITES = (("pool", {"register", "grow", "resume", "fork"}),
+                    ("host", {"pin"}))
+#: identifier substrings that mark a retry/escalation context
+_ESCALATION_MARKS = ("retry", "degrade", "escalate")
+
+
+def _is_transient_alloc_call(node: ast.Call) -> bool:
+    f = node.func
+    if not isinstance(f, ast.Attribute):
+        return False
+    recv = f.value
+    if isinstance(recv, ast.Name):
+        recv_name = recv.id
+    elif isinstance(recv, ast.Attribute):
+        recv_name = recv.attr
+    else:
+        return False
+    return any(recv_name == r and f.attr in ops
+               for r, ops in _TRANSIENT_SITES)
+
+
+def _has_escalation_context(fn, name: Optional[str]) -> bool:
+    """The function is itself a retry/escalation wrapper (by name) or
+    routes through one (references an identifier carrying a mark)."""
+    idents = {(name or "").lower()}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            idents.add(node.id.lower())
+        elif isinstance(node, ast.Attribute):
+            idents.add(node.attr.lower())
+    return any(m in ident for ident in idents for m in _ESCALATION_MARKS)
+
+
+def _own_nodes(fn):
+    """Walk ``fn`` without descending into nested function definitions
+    (those are visited on their own, inheriting the parent's escalation
+    context); lambdas stay part of the enclosing function."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
 
 
 def _is_placement_call(node: ast.Call, ops: Set[str]) -> bool:
@@ -65,7 +114,8 @@ def _guarded_names(fn: ast.AST) -> Set[str]:
 
 
 def _check_function(fn, path: str, host_tier_classes: Set[str],
-                    cls: Optional[str], out: List[Finding]) -> None:
+                    cls: Optional[str], out: List[Finding],
+                    escalated: bool = False) -> None:
     name = _fn_name(fn)
     guarded = _guarded_names(fn)
     has_release = False
@@ -77,7 +127,10 @@ def _check_function(fn, path: str, host_tier_classes: Set[str],
             continue
         f = node.func
         if isinstance(f, ast.Attribute):
-            if f.attr == "pin":
+            # a direct host.pin or delegation to a pin helper
+            # (e.g. _pin_with_retry) satisfies the spill contract
+            low = f.attr.lower()
+            if f.attr == "pin" or ("pin" in low and "unpin" not in low):
                 pins = True
             if _is_placement_call(node, _RELEASE):
                 has_release = True
@@ -117,6 +170,17 @@ def _check_function(fn, path: str, host_tier_classes: Set[str],
                     f"`page_table.pop` in `{name}` with no "
                     f"`placement.unref` or spill extraction on any path "
                     f"-- the popped request's pages leak",
+                    path, node.lineno))
+
+    # PL206: transient alloc/pin call with no retry/escalation context
+    if not (escalated or _has_escalation_context(fn, name)):
+        for node in _own_nodes(fn):
+            if isinstance(node, ast.Call) and _is_transient_alloc_call(node):
+                out.append(Finding(
+                    "PL206",
+                    f"`{ast.unparse(node.func)}` in `{name}` can fail "
+                    f"transiently under pressure; route it through a "
+                    f"bounded retry / degradation wrapper",
                     path, node.lineno))
 
     # PL205: host-tiered spill that never pins
@@ -161,14 +225,16 @@ def lint_ledger_protocol(files: Sequence[str]) -> List[Finding]:
                 elif _is_placement_call(node, _RELEASE):
                     releases = True
 
-        def walk_scope(scope, cls: Optional[str]):
+        def walk_scope(scope, cls: Optional[str], escalated: bool = False):
             for child in ast.iter_child_nodes(scope):
                 if isinstance(child, ast.ClassDef):
-                    walk_scope(child, child.name)
+                    walk_scope(child, child.name, escalated)
                 elif isinstance(child,
                                 (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    _check_function(child, path, host_tier, cls, out)
-                    walk_scope(child, cls)
+                    _check_function(child, path, host_tier, cls, out,
+                                    escalated)
+                    walk_scope(child, cls, escalated or
+                               _has_escalation_context(child, child.name))
 
         walk_scope(tree, None)
 

@@ -190,6 +190,13 @@ class LifecycleTracker:
             self.tracer.instant("terminal", cat="request", track="requests",
                                 ts=self.tracer.ts_of(t), rid=rid,
                                 status=status, n_tokens=n_tokens)
+            if status == "failed":
+                # an explicit failure marker on the fault track: chaos-run
+                # triage filters cat="fault" and sees quarantines inline
+                # with the injections that caused them
+                self.tracer.instant("failure", cat="fault",
+                                    track="requests",
+                                    ts=self.tracer.ts_of(t), rid=rid)
 
     def interrupt(self, rid: int, t: Optional[float] = None) -> None:
         """Close a surfaced-but-not-terminal request's open span with an

@@ -34,6 +34,8 @@ FEATURES = {
                            "signature",
     "tiered": "host-tier events: prefetch b/e spans (cat='prefetch') or "
               "tier promote/demote/hit instants (cat='tier')",
+    "resilience": "fault-layer instants (cat='fault'): injections, "
+                  "quarantines, watchdog trips, degradation rungs",
 }
 
 
@@ -117,6 +119,8 @@ def trace_features(obj) -> Set[str]:
         if (ph in ("b", "e") and cat == "prefetch") or \
                 (ph in ("i", "I") and cat == "tier"):
             feats.add("tiered")
+        if ph in ("i", "I") and cat == "fault":
+            feats.add("resilience")
         if ph == "C" and "bank" in str(ev.get("name", "")):
             feats.add("bank")
         if ph in ("i", "I") and cat == "jit":

@@ -85,6 +85,16 @@ class ServeConfig:
     prefix_store_pages: int = 64       # store capacity in pages (LRU)
     host_tier_bytes: Optional[int] = None  # host DRAM budget (None = off)
     prefetch_window: int = 2           # lookahead prefetch depth
+    # --- resilience / fault injection (paged backend only) ---
+    fault_plan: Optional[str] = None   # fault spec string (see
+                                       # serving/faults); REPRO_FAULTS env
+                                       # applies when unset
+    nan_guard: Optional[bool] = None   # post-step non-finite-logits guard
+                                       # (None = on iff faults active)
+    max_queued: Optional[int] = None   # admission control: queue-depth cap,
+                                       # excess submits end ``rejected``
+    request_timeout_s: Optional[float] = None  # max queue wait -> rejected
+    step_budget_s: Optional[float] = None      # watchdog wall-clock budget
 
     def __post_init__(self):
         if self.backend not in ("paged", "slots"):
@@ -93,6 +103,13 @@ class ServeConfig:
         if self.backend == "slots" and self.prefix_cache:
             raise ValueError("prefix_cache needs the paged backend "
                              "(page refcounts / block tables)")
+        if self.backend == "slots":
+            for f in ("fault_plan", "nan_guard", "max_queued",
+                      "request_timeout_s", "step_budget_s"):
+                if getattr(self, f) is not None:
+                    raise ValueError(
+                        f"{f} needs the paged backend (the resilience "
+                        "layer lives in the paged engine/pool)")
 
     def engine_config(self):
         """The backend-specific config this ServeConfig lowers to."""
@@ -114,7 +131,12 @@ class ServeConfig:
             prefix_cache=self.prefix_cache,
             prefix_store_pages=self.prefix_store_pages,
             host_tier_bytes=self.host_tier_bytes,
-            prefetch_window=self.prefetch_window)
+            prefetch_window=self.prefetch_window,
+            fault_plan=self.fault_plan,
+            nan_guard=self.nan_guard,
+            max_queued=self.max_queued,
+            request_timeout_s=self.request_timeout_s,
+            step_budget_s=self.step_budget_s)
 
 
 class RequestHandle:
@@ -145,7 +167,10 @@ class RequestHandle:
 
     @property
     def status(self) -> str:
-        """queued | running | done | aborted | truncated."""
+        """queued | running | done | aborted | truncated | failed |
+        rejected.  ``failed``: the engine quarantined the request after an
+        unrecoverable fault (``request.detail`` says why); ``rejected``:
+        admission control shed it before it decoded."""
         return self._req.status
 
     @property

@@ -43,12 +43,17 @@ from repro.core.paged import PAGE_TOKENS, pages_for
 from repro.models import model as M
 from repro.obs import Observability
 from repro.models.config import ModelConfig
+from repro.serving.faults import FaultPlan
+from repro.serving.resilience import (REPREFILL_CAP, BlobCorruption,
+                                      StepWatchdog, retry_transient)
 from repro.serving.sampler import SamplingConfig, sample
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 #: terminal request statuses -- a request in one of these will never
-#: produce another token
-TERMINAL_STATUSES = ("done", "aborted", "truncated")
+#: produce another token.  ``failed`` = the engine quarantined it after an
+#: unrecoverable fault (NaN logits, corruption past the re-prefill cap);
+#: ``rejected`` = admission control shed it before it ever decoded.
+TERMINAL_STATUSES = ("done", "aborted", "truncated", "failed", "rejected")
 
 
 @dataclasses.dataclass
@@ -65,7 +70,8 @@ class Request:
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     status: str = "new"                # new|queued|running|done|aborted|
-                                       # truncated
+                                       # truncated|failed|rejected
+    detail: Optional[str] = None       # why a request failed / was rejected
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -209,6 +215,9 @@ class _EngineCore:
         #: number the prefix-sharing benches compare
         self.prefill_tokens = 0
         self._key = jax.random.PRNGKey(seed)
+        #: wall-clock step budget monitor (paged engine wires one up when
+        #: ``step_budget_s`` is configured; None = zero cost)
+        self.watchdog: Optional[StepWatchdog] = None
 
     # ------------- public lifecycle API -------------
 
@@ -237,8 +246,19 @@ class _EngineCore:
         the span if work resumes)."""
         for r in self.pending_requests():
             self.obs.lifecycle.reopen(r.rid)
+        stalled = 0
         while self.has_work() and self.step_count < max_steps:
+            before = (self.step_count, len(self.done))
             self.step()
+            # no decode ran and nothing reached a terminal status: the
+            # engine is wedged (e.g. a head-of-queue request admission can
+            # never satisfy).  Bounded tolerance, then shed work loudly --
+            # run() must terminate, never spin.
+            stalled = 0 if (self.step_count, len(self.done)) != before \
+                else stalled + 1
+            if stalled >= 3:
+                self._break_stall()
+                stalled = 0
         if self.has_work():
             pending = self.pending_requests()
             for r in pending:
@@ -250,6 +270,16 @@ class _EngineCore:
     def _sanitize_teardown(self) -> None:
         """Shadow-ledger leak check after a full drain (REPRO_SANITIZE=1).
         Paged engines override; the default engine has no page ledger."""
+
+    def _break_stall(self) -> None:
+        """Called by ``run()`` after consecutive no-progress steps.  The
+        fixed-slot engine cannot stall (a free slot always admits, an
+        occupied slot always decodes), so the default sheds every queued
+        request defensively; the paged engine overrides with a targeted
+        ``rejected`` drop of the unadmittable head."""
+        for r in list(self.pending_requests()):
+            if r.status == "queued":
+                self._abort_impl(r.rid)
 
     def abort(self, rid: int) -> bool:
         """Cancel a request at any lifecycle point: waiting, mid-decode, or
@@ -291,6 +321,9 @@ class _EngineCore:
             "requests_aborted": m.value("requests_total", status="aborted"),
             "requests_truncated": m.value("requests_total",
                                           status="truncated"),
+            "requests_failed": m.value("requests_total", status="failed"),
+            "requests_rejected": m.value("requests_total",
+                                         status="rejected"),
             "active_requests": float(n_active),
             "queued_requests": float(n_queued),
         }
@@ -339,8 +372,11 @@ class _EngineCore:
     def _abort_impl(self, rid: int) -> bool:
         raise NotImplementedError
 
-    def _finalize(self, req: Request, status: str):
+    def _finalize(self, req: Request, status: str,
+                  detail: Optional[str] = None):
         req.status = status
+        if detail is not None:
+            req.detail = detail
         req.truncated = status == "truncated"
         req.t_done = time.perf_counter()
         self.done.append(req)
@@ -362,6 +398,8 @@ class _EngineCore:
         ``decode_step`` X event on the engine track."""
         self.step_times.append(dt)
         self.step_compiled.append(compiled)
+        if self.watchdog is not None:
+            self.watchdog.observe(self.step_count, dt)
         self.obs.metrics.histogram(
             "step_s", compile="true" if compiled else "false").observe(dt)
         self.obs.tracer.complete(
@@ -572,6 +610,16 @@ class PagedEngineConfig:
     host_tier_bytes: Optional[int] = None  # host tier budget (None = unmetered)
     prefetch_window: int = 2          # scheduler lookahead for async
                                       # spill-resume / prefix prefetch
+    # --- resilience / fault injection (serving/faults, serving/resilience) ---
+    fault_plan: Optional[str] = None  # fault spec string; the REPRO_FAULTS
+                                      # env var applies when unset
+    nan_guard: Optional[bool] = None  # post-step non-finite-logits guard;
+                                      # None = enabled iff faults are active
+                                      # (the check costs one device sync)
+    max_queued: Optional[int] = None  # admission control: submits beyond
+                                      # this queue depth are ``rejected``
+    request_timeout_s: Optional[float] = None  # queued longer -> ``rejected``
+    step_budget_s: Optional[float] = None      # watchdog wall-clock budget
 
 
 @dataclasses.dataclass
@@ -580,6 +628,9 @@ class _Active:
     length: int                       # cached positions so far
     pending: List[int]                # prompt tokens not yet consumed
     cur_token: int                    # next token to feed once prompt is done
+    replayed: bool = False            # corruption-recovery re-prefill: the
+                                      # "prompt" includes generated tokens,
+                                      # so prefix-store inserts are skipped
 
 
 class PagedServingEngine(_EngineCore):
@@ -615,6 +666,18 @@ class PagedServingEngine(_EngineCore):
         self._occ: List[float] = []
         self._frag: List[float] = []
         self.last_traffic: Optional[np.ndarray] = None
+        # --- resilience wiring (all None/empty => zero overhead) ---
+        self.faults = FaultPlan.maybe(pcfg.fault_plan, seed=pcfg.seed)
+        self.pool.faults = self.faults
+        self.watchdog = StepWatchdog(pcfg.step_budget_s, obs=self.obs)
+        self._nan_guard = (pcfg.nan_guard if pcfg.nan_guard is not None
+                           else self.faults is not None)
+        #: rid -> full replay token stream (prompt + generated) for the
+        #: bounded re-prefill after a detected spill-blob corruption
+        self._replay: Dict[int, List[int]] = {}
+        self._reprefills: Dict[int, int] = {}
+        #: rid -> consecutive failed admission attempts (degradation rung)
+        self._admit_fails: Dict[int, int] = {}
         self._prefill = self.obs.wrap_jit(
             jax.jit(partial(M.prefill, cfg=cfg, mesh_axes=mesh_axes)),
             "engine.prefill")
@@ -631,9 +694,21 @@ class PagedServingEngine(_EngineCore):
                 "parent with retain=True and let it finish first)")
 
     def _enqueue(self, req: Request):
+        mq = self.pcfg.max_queued
+        if mq is not None and len(self.sched) >= mq:
+            # overload shedding at the door: better an immediate, explicit
+            # rejection than an unbounded queue nobody drains in time
+            self.obs.metrics.counter("degradations_total", rung="shed").inc()
+            self._finalize(req, "rejected",
+                           detail=f"queue full (max_queued={mq})")
+            return
         self.sched.push(req)
 
     def step(self) -> bool:
+        if self.faults is not None:
+            self.faults.set_step(self.step_count)
+        if self.pcfg.request_timeout_s is not None:
+            self._expire_queued()
         admitted = self._admit()
         if self.active:
             self._ensure_headroom()
@@ -644,15 +719,37 @@ class PagedServingEngine(_EngineCore):
             self._issue_prefetches()
             self._decode_step()
         elif self.sched and not admitted:
-            # queue non-empty but nothing fits and nothing runs:
-            # fail the head loudly rather than spinning
-            req = self.sched.pop()
-            if req.rid in self.spilled:
-                sp, _, _ = self.spilled.pop(req.rid)
-                self.pool.prefetch_cancel(req.rid)
-                self.pool.drop_spilled(sp, req.rid)
-            self._finalize(req, "truncated")
+            # queue non-empty but nothing fits and nothing runs: shed the
+            # head loudly rather than spinning (a request whose admission
+            # can *never* be satisfied would otherwise wedge the engine)
+            self._drop_queued(
+                self.sched.peek(), "rejected",
+                detail="cannot admit with the pool idle (request does not "
+                       "fit the page budget)")
         return self.has_work()
+
+    def _expire_queued(self) -> None:
+        now = time.perf_counter()
+        budget = self.pcfg.request_timeout_s
+        for req in self.sched.requests():
+            if req.t_submit and now - req.t_submit > budget:
+                self.obs.metrics.counter("request_timeouts_total").inc()
+                self._drop_queued(
+                    req, "rejected",
+                    detail=f"queued longer than request_timeout_s={budget}")
+
+    def _drop_queued(self, req: Request, status: str, detail: str) -> None:
+        """Remove a not-yet-admitted request (queued or spilled) with full
+        cleanup: scheduler entry, spill blob, staged prefetch, replay ctx."""
+        rid = req.rid
+        self.sched.remove(rid)
+        if rid in self.spilled:
+            sp, _, _ = self.spilled.pop(rid)
+            self.pool.prefetch_cancel(rid)
+            self.pool.drop_spilled(sp, rid)
+        self._replay.pop(rid, None)
+        self._admit_fails.pop(rid, None)
+        self._finalize(req, status, detail=detail)
 
     def has_work(self) -> bool:
         return bool(self.sched) or bool(self.active)
@@ -702,6 +799,11 @@ class PagedServingEngine(_EngineCore):
 
     def _admission_need(self, req: Request) -> int:
         """Pages admission must find free for ``req`` (plus one slab)."""
+        if req.rid in self._replay:
+            # corruption recovery re-prefills from the replay stream; the
+            # prefix store is bypassed entirely
+            return pages_for(
+                self._bucket_prefill_len(len(self._replay[req.rid])))
         if req.rid in self.spilled:
             if self.pool.prefetch_ready(req.rid):
                 return 0            # staged: commit is O(1) bookkeeping
@@ -736,14 +838,113 @@ class PagedServingEngine(_EngineCore):
                     continue
                 break
             req = self.sched.pop()
-            if req.rid in self.spilled:
-                self._resume(req)
-            elif req.parent_rid is not None:
-                self._fork_into(req)
-            else:
-                self._prefill_into(req)
+            try:
+                if req.rid in self.spilled:
+                    ok = self._resume(req)
+                elif req.parent_rid is not None:
+                    ok = self._fork_into(req)
+                else:
+                    ok = self._prefill_into(req)
+            except BlobCorruption:
+                # the spill blob failed its checksum inside pool.resume:
+                # the spilled entry is still intact -- recover by bounded
+                # re-prefill (the request was popped, so re-push happens
+                # inside the recovery)
+                self._recover_corrupt(req, in_queue=False)
+                continue
+            if not ok:
+                # transient allocation failure survived bounded retry:
+                # walk the degradation ladder (progress is guaranteed --
+                # the final rung sheds the request)
+                self._degrade(req, need)
+                continue
+            self._admit_fails.pop(req.rid, None)
             admitted = True
         return admitted
+
+    def _retry(self, site: str, fn) -> bool:
+        """Bounded retry around an allocation-style pool call (the PL206
+        contract: alloc/pin sites never assert success, they retry and
+        escalate).  Counts retries and recoveries per site."""
+        retried = [0]
+
+        def on_retry(_k):
+            retried[0] += 1
+            self.obs.metrics.counter("fault_retries_total", site=site).inc()
+
+        ok = bool(retry_transient(fn, on_retry=on_retry))
+        if ok and retried[0]:
+            self.obs.metrics.counter("faults_recovered_total",
+                                     site=site).inc()
+        return ok
+
+    def _degrade(self, req: Request, need: int) -> None:
+        """Admission of a popped request failed after bounded retry: walk
+        the degradation ladder, escalating per request across attempts --
+        reclaim store pages, then preempt live work, then shed the request
+        with ``rejected``.  The rung counter guarantees termination."""
+        fails = self._admit_fails.get(req.rid, 0) + 1
+        self._admit_fails[req.rid] = fails
+        m = self.obs.metrics
+        if fails == 1:
+            self.pool.reclaim(need + 1)
+            m.counter("degradations_total", rung="demote_store").inc()
+        elif fails == 2:
+            victim = self.sched.choose_victim(
+                [a.req for a in self.active.values()])
+            if victim is not None:
+                self._preempt(victim.rid)
+            m.counter("degradations_total", rung="preempt").inc()
+        else:
+            m.counter("degradations_total", rung="shed").inc()
+            self._drop_queued(
+                req, "rejected",
+                detail=f"admission failed after retries (need {need} pages)")
+            return
+        req.status = "queued"
+        self.sched.push(req, resumed=True)
+
+    def _recover_corrupt(self, req: Request, in_queue: bool) -> None:
+        """A spill blob failed its checksum: drop the poisoned bytes and
+        re-prefill the request from its retained token ids (prompt plus
+        every token generated so far), bounded by ``REPREFILL_CAP``.
+
+        ``in_queue`` distinguishes the two detection points: during a
+        prefetch (request still in the scheduler heap, which must not be
+        touched -- tombstoned rids cannot be re-pushed) vs during admission
+        (request just popped, so recovery re-pushes it)."""
+        rid = req.rid
+        entry = self.spilled.pop(rid, None)
+        self.pool.prefetch_cancel(rid)
+        if entry is not None:
+            self.pool.drop_spilled(entry[0], rid)
+        self.obs.metrics.counter("blob_corruptions_total").inc()
+        self.obs.tracer.instant("fault.blob_corrupt_detected", cat="fault",
+                                track="engine", rid=rid)
+        n = self._reprefills.get(rid, 0)
+        if req.parent_rid is not None or n >= REPREFILL_CAP:
+            # a fork child's shared prefix belongs to its parent -- its own
+            # token ids cannot rebuild that state -- and a request that
+            # keeps corrupting is dropped, not retried forever
+            why = ("fork child spill blob corrupted (shared prefix is not "
+                   "replayable)" if req.parent_rid is not None else
+                   f"spill blob corrupted {n + 1}x (re-prefill cap "
+                   f"{REPREFILL_CAP} exhausted)")
+            if in_queue:
+                self._drop_queued(req, "failed", detail=why)
+            else:
+                self._replay.pop(rid, None)
+                self._finalize(req, "failed", detail=why)
+            return
+        self._reprefills[rid] = n + 1
+        # everything the model had consumed, rebuilt through a fresh
+        # prefill + streamed tail: the prompt plus all generated tokens
+        self._replay[rid] = list(map(int, req.prompt)) + list(req.output)
+        self.obs.metrics.counter("faults_recovered_total",
+                                 site="blob_corrupt").inc()
+        if not in_queue:
+            req.status = "queued"
+            self.sched.push(req, resumed=True)
 
     def _assign_row(self, rid: int):
         row = self.rows.index(None)
@@ -768,42 +969,56 @@ class PagedServingEngine(_EngineCore):
                 s0 = max(fits)
         return s0
 
-    def _prefill_into(self, req: Request):
-        nodes = self.pool.prefix_match(req.prompt)
-        if nodes and self.pool.prefix_admit(req.rid, nodes):
-            self._prefix_hit_into(req, nodes)
-            return
-        self.pool.note_prefix_miss()
+    def _prefill_into(self, req: Request) -> bool:
+        replay = self._replay.get(req.rid)
+        if replay is None:
+            nodes = self.pool.prefix_match(req.prompt)
+            if nodes:
+                if self.pool.prefix_admit(req.rid, nodes):
+                    self._prefix_hit_into(req, nodes)
+                    return True
+                # ladder rung "drop_prefix": the store hit could not be
+                # admitted (promotion short) -- fall back to plain prefill
+                self.obs.metrics.counter("degradations_total",
+                                         rung="drop_prefix").inc()
+            self.pool.note_prefix_miss()
+        src = np.asarray(replay, np.int32) if replay is not None \
+            else req.prompt
         t_p0 = time.perf_counter()
         self.obs.lifecycle.phase(req.rid, "prefill", t=t_p0)
-        s0 = self._bucket_prefill_len(len(req.prompt))
-        ok = self.pool.register(req.rid, pages_for(s0))
-        assert ok, "admission checked capacity"
+        s0 = self._bucket_prefill_len(len(src))
+        if not self._retry("alloc",
+                           lambda: self.pool.register(req.rid, pages_for(s0))):
+            return False                # replay ctx (if any) stays for retry
+        self._replay.pop(req.rid, None)
         # the whole prompt is fresh context: s0 through full-sequence
         # prefill, the tail streamed through the decode batch.  With
         # prefill_buckets set, s0 comes from a fixed bucket set, so the
         # slice below feeds a bounded family of compiled shapes.
-        self._count_prefill(len(req.prompt))
-        prompt = jnp.asarray(req.prompt[:s0], jnp.int32)[None]  # lint: disable=JH103
+        self._count_prefill(len(src))
+        prompt = jnp.asarray(src[:s0], jnp.int32)[None]  # lint: disable=JH103
         logits, row_caches = self._prefill(
             self.params, batch={"tokens": prompt, "targets": prompt})
         self.pool.insert_prefill(req.rid, row_caches)
-        if s0 % PAGE_TOKENS == 0:
+        if replay is None and s0 % PAGE_TOKENS == 0:
             # the prefilled pages are full and immutable: remember them in
             # the prefix store for future requests sharing this prompt
+            # (replay streams contain generated tokens -- never stored)
             self.pool.store_insert(req.rid, req.prompt[:s0])
         self.obs.tracer.complete(
             "prefill", cat="prefill", ts=self.obs.tracer.ts_of(t_p0),
             dur=(time.perf_counter() - t_p0) * 1e6, track="engine",
-            rid=req.rid, tokens=s0, chunked=bool(len(req.prompt) > s0))
-        a = _Active(req, length=s0, pending=list(map(int, req.prompt[s0:])),
-                    cur_token=-1)
+            rid=req.rid, tokens=s0, chunked=bool(len(src) > s0),
+            replay=bool(replay is not None))
+        a = _Active(req, length=s0, pending=list(map(int, src[s0:])),
+                    cur_token=-1, replayed=replay is not None)
         if not a.pending:
             self._key, toks = _sample_tokens(self._key, logits,
                                              self.pcfg.sampling)
             tok = int(toks[0])
-            req.t_first = time.perf_counter()
-            self.obs.lifecycle.first_token(req.rid, t=req.t_first)
+            if not req.t_first:
+                req.t_first = time.perf_counter()
+                self.obs.lifecycle.first_token(req.rid, t=req.t_first)
             req.output.append(tok)
             a.cur_token = tok
         self.active[req.rid] = a
@@ -814,6 +1029,7 @@ class PagedServingEngine(_EngineCore):
                            or (req.eos_id is not None
                                and req.output[-1] == req.eos_id)):
             self._finish(req.rid)       # prefill already produced the end
+        return True
 
     def _prefix_hit_into(self, req: Request, nodes) -> None:
         """Admit a request whose prompt prefix came out of the radix store:
@@ -846,12 +1062,19 @@ class PagedServingEngine(_EngineCore):
         reserve = max(1, len(self.active))
         for req in self.sched.lookahead(window):
             if req.rid in self.spilled:
-                self.pool.prefetch_begin(req.rid, self.spilled[req.rid][0],
-                                         reserve=reserve)
-            elif req.parent_rid is None:
+                try:
+                    self.pool.prefetch_begin(req.rid,
+                                             self.spilled[req.rid][0],
+                                             reserve=reserve)
+                except BlobCorruption:
+                    # detected before the device copy was ever dispatched;
+                    # the request stays in the scheduler heap and its next
+                    # admission re-prefills from the replay stream
+                    self._recover_corrupt(req, in_queue=True)
+            elif req.parent_rid is None and req.rid not in self._replay:
                 self.pool.prefetch_prefix(req.prompt)
 
-    def _fork_into(self, req: Request):
+    def _fork_into(self, req: Request) -> bool:
         """Admit a copy-on-write fork: share the retained parent's full
         prefix pages, copy only its partial tail page + slab, and stream
         the continuation tokens (the parent's final sampled token, then the
@@ -859,8 +1082,9 @@ class PagedServingEngine(_EngineCore):
         shared prefix ever happens."""
         parent = self.retained.get(req.parent_rid)
         assert parent is not None, f"fork parent {req.parent_rid} released"
-        ok = self.pool.fork(req.parent_rid, req.rid, parent.length)
-        assert ok, "admission checked capacity"
+        if not self._retry("alloc", lambda: self.pool.fork(
+                req.parent_rid, req.rid, parent.length)):
+            return False
         pending = [int(parent.cur_token)] + list(map(int, req.prompt))
         self._count_prefill(len(pending))
         a = _Active(req, length=parent.length, pending=pending, cur_token=-1)
@@ -868,15 +1092,22 @@ class PagedServingEngine(_EngineCore):
         self._assign_row(req.rid)
         req.status = "running"
         self.obs.lifecycle.phase(req.rid, "decode")
+        return True
 
-    def _resume(self, req: Request):
-        sp, pending, cur = self.spilled.pop(req.rid)
-        ok = self.pool.resume(req.rid, sp)
-        assert ok, "admission checked capacity"
+    def _resume(self, req: Request) -> bool:
+        # read without popping: a checksum failure inside ``pool.resume``
+        # propagates as BlobCorruption with the spill entry intact, so the
+        # recovery path can account for and drop the poisoned blob
+        sp, pending, cur = self.spilled[req.rid]
+        if not self._retry("alloc",
+                           lambda: self.pool.resume(req.rid, sp)):
+            return False
+        del self.spilled[req.rid]
         self.active[req.rid] = _Active(req, sp.length, pending, cur)
         self._assign_row(req.rid)
         req.status = "running"
         self.obs.lifecycle.phase(req.rid, "decode")
+        return True
 
     def _preempt(self, rid: int):
         """Evict by page spill: state leaves the device bit-exactly and the
@@ -909,7 +1140,9 @@ class PagedServingEngine(_EngineCore):
                 continue
             needed = a.length // PAGE_TOKENS + 1
             while needed > len(self.pool.page_table[rid]):
-                if self.pool.grow(rid, needed - len(self.pool.page_table[rid])):
+                short = needed - len(self.pool.page_table[rid])
+                if self._retry("alloc",
+                               lambda: self.pool.grow(rid, short)):
                     break
                 victim = self.sched.choose_victim(
                     [b.req for b in self.active.values()], exclude=a.req)
@@ -933,11 +1166,22 @@ class PagedServingEngine(_EngineCore):
             lengths[row] = a.length
         c0 = self.obs.recompiles.n_events
         t0 = time.perf_counter()
+        if self.faults is not None and self.faults.should_fire("slow_step"):
+            stall_s = self.faults.param("slow_step", "ms") / 1000.0
+            self.obs.metrics.counter("faults_injected_total",
+                                     site="slow_step").inc()
+            self.obs.tracer.instant("fault.slow_step", cat="fault",
+                                    track="engine", ms=stall_s * 1e3)
+            time.sleep(stall_s)     # inside the timed window: the watchdog
+                                    # must see (and flag) the blown budget
         logits = self.pool.decode(self.params, self.rows, tokens, lengths,
                                   seed=self.step_count)
+        if self.faults is not None:
+            logits = self._inject_nan(logits)
         self._key, toks = _sample_tokens(self._key, logits,
                                          self.pcfg.sampling)
         toks_np = np.asarray(toks)
+        bad_rows = self._scan_nonfinite(logits) if self._nan_guard else ()
         self._record_step(t0, time.perf_counter() - t0,
                           compiled=self.obs.recompiles.n_events > c0,
                           batch=sum(1 for r in self.rows if r is not None))
@@ -972,9 +1216,16 @@ class PagedServingEngine(_EngineCore):
         for row, rid in enumerate(self.rows):
             if rid is None:
                 continue
+            if row in bad_rows:
+                # quarantine exactly this request -- its logits are
+                # non-finite and its sampled token is garbage.  Every other
+                # row's token stream is untouched (sampling is row-wise).
+                self._fail_active(rid, "non-finite logits after decode step")
+                continue
             a = self.active[rid]
             a.length += 1
             if (a.req.parent_rid is None
+                    and not a.replayed
                     and a.length % PAGE_TOKENS == 0
                     and a.length <= len(a.req.prompt)):
                 # a chunk-streamed prompt just filled a page: the page is
@@ -989,8 +1240,9 @@ class PagedServingEngine(_EngineCore):
                 # that was the last prompt token: this step's logits are
                 # the first-generation distribution
                 tok = int(toks_np[row])
-                a.req.t_first = time.perf_counter()
-                self.obs.lifecycle.first_token(rid, t=a.req.t_first)
+                if not a.req.t_first:   # replays already emitted tokens
+                    a.req.t_first = time.perf_counter()
+                    self.obs.lifecycle.first_token(rid, t=a.req.t_first)
                 a.req.output.append(tok)
                 a.cur_token = tok
             else:
@@ -1002,6 +1254,52 @@ class PagedServingEngine(_EngineCore):
                        and req.output[-1] == req.eos_id)
             if len(req.output) >= req.max_new_tokens or hit_eos:
                 self._finish(rid)
+
+    # ------------- fault handling -------------
+
+    def _inject_nan(self, logits):
+        """Apply any scheduled ``nan`` faults: poison the logits row of the
+        targeted request (the guard below must quarantine it)."""
+        for row, rid in enumerate(self.rows):
+            if rid is not None and self.faults.should_fire("nan", rid=rid):
+                logits = logits.at[row].set(jnp.nan)
+                self.obs.metrics.counter("faults_injected_total",
+                                         site="nan").inc()
+                self.obs.tracer.instant("fault.nan", cat="fault",
+                                        track="engine", rid=rid, row=row)
+        return logits
+
+    def _scan_nonfinite(self, logits) -> set:
+        """Rows whose logits contain NaN/Inf (one device sync; only runs
+        when the guard is enabled)."""
+        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        return {row for row, rid in enumerate(self.rows)
+                if rid is not None and not bool(finite[row])}
+
+    def _fail_active(self, rid: int, reason: str) -> None:
+        """Quarantine one active request mid-batch: free its row and pages
+        immediately, close its lifecycle span as ``failed``.  The rest of
+        the batch keeps decoding bit-exactly."""
+        a = self.active.pop(rid)
+        self._free_row(rid)
+        self.pool.release(rid)
+        self.obs.metrics.counter("quarantines_total").inc()
+        self.obs.tracer.instant("fault.quarantine", cat="fault",
+                                track="engine", rid=rid)
+        self._finalize(a.req, "failed", detail=reason)
+
+    def _break_stall(self) -> None:
+        """No-progress steps in ``run()``: shed the unadmittable queue head
+        with a clear reason instead of spinning forever."""
+        head = self.sched.peek() if self.sched else None
+        if head is None:
+            super()._break_stall()
+            return
+        self.obs.metrics.counter("stalls_broken_total").inc()
+        self._drop_queued(
+            head, "rejected",
+            detail="engine made no progress for 3 consecutive steps with "
+                   "this request at the head of the queue")
 
     def _sanitize_teardown(self) -> None:
         # only assert once the spill set is empty: engine-held

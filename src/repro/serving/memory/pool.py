@@ -38,6 +38,7 @@ from repro.models.config import ModelConfig
 from repro.core.paged import pages_for  # noqa: F401  (canonical home moved)
 from repro.serving.memory.layout import PAGE_TOKENS, CachePaging
 from repro.serving.memory.placement import BankAwarePlacement, BankTopology
+from repro.serving.resilience import crc_blob, verify_blob
 
 
 def bucket_pages(npg: int) -> int:
@@ -61,6 +62,9 @@ class SpilledRequest:
     length: int
     private_idx: List[int] = dataclasses.field(default_factory=list)
     shared: List[tuple] = dataclasses.field(default_factory=list)
+    #: CRC32 of ``blob`` at extraction; resume/prefetch verify it before
+    #: the bits re-enter the device (None = unchecked legacy blob)
+    crc: Optional[int] = None
 
     @property
     def pages_needed(self) -> int:
@@ -152,6 +156,11 @@ class PagedStatePool:
         self.shared_page_hits = 0
         #: optional repro.obs.Observability (see ``attach_obs``)
         self._obs = None
+        #: optional repro.serving.faults.FaultPlan -- when installed (the
+        #: engine wires ``ServeConfig.fault_plan`` / ``REPRO_FAULTS``
+        #: through), allocation sites consult it for injected transient
+        #: failures.  One ``is None`` test per site when disabled.
+        self.faults = None
 
     # ------------------------------------------------------------------
     # observability
@@ -175,6 +184,20 @@ class PagedStatePool:
     def _instant(self, name: str, **args) -> None:
         if self._obs is not None:
             self._obs.tracer.instant(name, cat="pool", track="pool", **args)
+
+    def _inject(self, site: str, rid: Optional[int] = None,
+                what: str = "") -> bool:
+        """One fault-plan consult: True means the caller must fail now.
+        Fires are mirrored into ``faults_injected_total{site=}`` and a
+        ``cat="fault"`` trace instant."""
+        if self.faults is None or not self.faults.should_fire(site, rid=rid):
+            return False
+        if self._obs is not None:
+            self._obs.metrics.counter("faults_injected_total",
+                                      site=site).inc()
+            self._obs.tracer.instant(f"fault.{site}", cat="fault",
+                                     track="pool", rid=rid, what=what)
+        return True
 
     def _account_gather(self, nbytes: float) -> None:
         """Bytes moved by gather/scatter (spill/resume/prefill-insert/fork
@@ -207,6 +230,8 @@ class PagedStatePool:
         assert rid not in self.page_table
         if not self.can_admit(n_pages):
             return False
+        if self._inject("alloc", rid=rid, what="register"):
+            return False                # injected transient shortage
         pages = self.placement.alloc(n_pages)
         if pages is None:
             return False
@@ -218,6 +243,8 @@ class PagedStatePool:
 
     def grow(self, rid: int, n_new: int) -> bool:
         """Extend a request's block table -- copy-free, just new page ids."""
+        if self._inject("alloc", rid=rid, what="grow"):
+            return False                # injected transient shortage
         pages = self.placement.alloc(n_new)
         if pages is None:
             return False
@@ -325,8 +352,12 @@ class PagedStatePool:
         self._account_gather(self.request_nbytes(len(priv)))
         self._instant("pool.spill", rid=rid, private_pages=len(priv),
                       shared_pages=len(shared))
+        # checksum the host copy at the tier boundary: resume/prefetch
+        # verify it, so a corrupted blob is detected instead of silently
+        # poisoning decode
         return SpilledRequest(host, len(pages), length,
-                              private_idx=private_idx, shared=shared)
+                              private_idx=private_idx, shared=shared,
+                              crc=crc_blob(host))
 
     def resume(self, rid: int, sp: SpilledRequest) -> bool:
         """Re-pin a spilled request: private pages land on fresh physical
@@ -336,6 +367,11 @@ class PagedStatePool:
         assert rid not in self.page_table
         if not self.can_admit(sp.pages_needed):
             return False
+        # the blob is about to re-enter the device: a corrupted byte must
+        # stop here (BlobCorruption), not surface as garbage logits
+        verify_blob(sp.blob, sp.crc, "spill blob", rid=rid)
+        if self._inject("alloc", rid=rid, what="resume"):
+            return False                # injected transient shortage
         fresh = self.placement.alloc(sp.pages_needed)
         if fresh is None:
             return False

@@ -50,6 +50,10 @@ class StoredPage:
     device_page: Optional[int] = None
     #: host-tier payload (list of numpy leaves) when demoted
     host_blob: Optional[object] = None
+    #: CRC32 of ``host_blob`` recorded at demotion; promote verifies it,
+    #: evicting the node on mismatch (a corrupt cache entry is a miss,
+    #: never a poisoned hit)
+    host_crc: Optional[int] = None
     #: host snapshot of the recurrent state at the *end* of this page; an
     #: empty list is valid (attention-only models have no slab leaves)
     state: Optional[object] = None

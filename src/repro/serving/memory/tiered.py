@@ -40,6 +40,8 @@ import numpy as np
 from repro.serving.memory.layout import PAGE_TOKENS
 from repro.serving.memory.pool import PagedStatePool, SpilledRequest
 from repro.serving.memory.prefix_store import PrefixStore, StoredPage
+from repro.serving.resilience import (BlobCorruption, corrupt_blob, crc_blob,
+                                      retry_transient, verify_blob)
 
 
 class HostTier:
@@ -116,7 +118,11 @@ class TieredStatePool(PagedStatePool):
         self.prefix_hits = 0
         self.prefix_hit_pages = 0
         self.prefix_hit_tokens = 0
+        #: prefetch lifecycle ledger: every begin must end in exactly one
+        #: commit or cancel (checked by the sanitizer at teardown)
+        self.prefetch_begun = 0
         self.prefetch_commits = 0
+        self.prefetch_cancels = 0
         # tier movement jits: bare page stacks and slab rows (the units of
         # store demotion / promotion and state-snapshot capture).  Extracts
         # never donate -- callers keep using the pools; inserts donate like
@@ -163,18 +169,59 @@ class TieredStatePool(PagedStatePool):
 
     def spill(self, rid: int, length: int) -> SpilledRequest:
         sp = super().spill(rid, length)
+        if self._inject("blob_corrupt", rid=rid, what="spill"):
+            # flip one byte *after* the CRC was recorded: resume/prefetch
+            # must detect the mismatch, not decode the garbage
+            corrupt_blob(sp.blob)
         nbytes = _blob_nbytes(sp.blob)
-        self.host.pin(rid, nbytes)
+        self._pin_with_retry(rid, nbytes)
         self._tier_metric("demote_bytes_total", nbytes, kind="spill")
         self._tier_instant("tier.demote", rid=rid, bytes=nbytes, kind="spill")
         self._sync_host_gauge()
         return sp
 
+    def _pin_with_retry(self, rid: int, nbytes: float) -> None:
+        """Pin a spill blob in the host ledger with bounded retry against
+        injected transient pin failures, then *force-pin*: a preempted
+        request's bits are live state and may never be dropped, so the
+        terminal rung here is overshoot-and-degrade, not failure."""
+        retried = [0]
+
+        def attempt():
+            if self._inject("host_pin", rid=rid, what="spill"):
+                return False
+            self.host.pin(rid, nbytes)
+            return True
+
+        def on_retry(_k):
+            retried[0] += 1
+            self._tier_metric("fault_retries_total", site="host_pin")
+
+        if retry_transient(attempt, on_retry=on_retry):
+            if retried[0]:
+                self._tier_metric("faults_recovered_total", site="host_pin")
+            return
+        # retries exhausted: pin anyway (HostTier pins may overshoot the
+        # budget by contract) and record the degradation
+        self.host.pin(rid, nbytes)
+        self._tier_metric("degradations_total", rung="force_pin")
+        if self._obs is not None:
+            self._obs.tracer.instant("fault.host_pin_forced", cat="fault",
+                                     track="pool", rid=rid)
+
     def resume(self, rid: int, sp: SpilledRequest) -> bool:
         """Synchronous resume -- the fallback when no prefetch was staged.
         A staged prefetch commits instead (O(1), no gather here)."""
         if rid in self._staged:
-            return self.prefetch_commit(rid)
+            if self._inject("prefetch_commit", rid=rid, what="commit"):
+                # injected commit failure: return the staging pages and
+                # fall back to the synchronous path below -- the request
+                # still resumes, one gather later than planned
+                self.prefetch_cancel(rid)
+                self._tier_metric("faults_recovered_total",
+                                  site="prefetch_commit")
+            else:
+                return self.prefetch_commit(rid)
         if not super().resume(rid, sp):
             return False
         nbytes = self.host.unpin(rid)
@@ -206,10 +253,14 @@ class TieredStatePool(PagedStatePool):
         need = sp.pages_needed
         if self.free_pages < need + reserve or self.free_slabs < 2:
             return False
+        # verify *before* dispatch: a corrupt blob must never start a
+        # device copy (the engine converts this into a re-prefill)
+        verify_blob(sp.blob, sp.crc, "spill blob", rid=rid)
         pages = self.placement.alloc(need)
         if pages is None:
             return False
         self.pages_allocated += need
+        self.prefetch_begun += 1
         slab = self._free_slabs.pop()
         ts0 = (self._obs.tracer.now_us() if self._obs is not None else 0.0)
         # async dispatch: XLA begins the host->device copy immediately and
@@ -261,6 +312,7 @@ class TieredStatePool(PagedStatePool):
             return
         self.placement.unref(st.pages)
         self._free_slabs.append(st.slab)
+        self.prefetch_cancels += 1
         if self._obs is not None:
             ts1 = self._obs.tracer.now_us()
             self._obs.tracer.async_span("prefetch", rid, cat="prefetch",
@@ -387,6 +439,9 @@ class TieredStatePool(PagedStatePool):
         blob = self._extract_pages(
             self.pools, jnp.asarray([node.device_page], jnp.int32))
         node.host_blob = [np.asarray(x) for x in blob]
+        node.host_crc = crc_blob(node.host_blob)
+        if self._inject("blob_corrupt", what="store_demote"):
+            corrupt_blob(node.host_blob)
         self.placement.unref([node.device_page])
         node.device_page = None
         self.host.cache_add(nbytes)
@@ -398,10 +453,23 @@ class TieredStatePool(PagedStatePool):
         return True
 
     def promote_node(self, node: StoredPage) -> bool:
-        """Bring a demoted store node back to the device (a cold hit)."""
+        """Bring a demoted store node back to the device (a cold hit).
+
+        The host payload is checksum-verified first: a corrupt cache entry
+        is converted into a *miss* (the node -- and, for interior nodes,
+        its whole subtree -- is evicted) rather than a poisoned hit."""
         if node.resident:
             return True
         assert node.host_blob is not None
+        try:
+            verify_blob(node.host_blob, node.host_crc, "store blob")
+        except BlobCorruption:
+            self._evict_subtree(node)
+            self._tier_metric("faults_recovered_total", site="store_promote")
+            self._tier_instant("tier.store_corrupt", node=node.node_id)
+            return False
+        if self._inject("alloc", what="promote"):
+            return False
         got = self.placement.alloc(1)
         if got is None:
             return False
@@ -410,6 +478,7 @@ class TieredStatePool(PagedStatePool):
                                         jnp.asarray(got, jnp.int32))
         node.device_page = got[0]
         node.host_blob = None
+        node.host_crc = None
         nbytes = self.page_nbytes
         self.host.cache_drop(nbytes)
         self._account_gather(nbytes)
@@ -429,11 +498,36 @@ class TieredStatePool(PagedStatePool):
         if node.host_blob is not None:
             self.host.cache_drop(self.page_nbytes)
             node.host_blob = None
+            node.host_crc = None
         if node.state is not None:
             self.host.cache_drop(_blob_nbytes(node.state))
             node.state = None
         self._tier_instant("tier.evict", node=node.node_id)
         self._sync_host_gauge()
+
+    def _evict_subtree(self, node: StoredPage) -> int:
+        """Evict ``node`` and every descendant (``PrefixStore.remove`` is
+        leaf-only, so the subtree is peeled deepest-first).  Used when an
+        *interior* node's host payload fails its checksum: its cached path
+        is unusable below the corruption point.  Locked descendants stop
+        the peel -- their payloads back live requests -- in which case the
+        corrupt node simply stays unpromotable: every later promote attempt
+        re-detects the mismatch and reports a miss.  Returns nodes evicted."""
+        evicted = 0
+        while True:
+            sub = [node]
+            i = 0
+            while i < len(sub):
+                sub.extend(sub[i].children.values())
+                i += 1
+            peel = [n for n in sub if n.is_leaf and not self._locked(n)]
+            if not peel:
+                return evicted
+            for n in peel:
+                self.evict_node(n)
+                evicted += 1
+            if node not in self.store.nodes():
+                return evicted
 
     def sanitizer_owned_pages(self) -> set:
         """Base owners plus staged prefetch pages and resident prefix-store
@@ -444,6 +538,20 @@ class TieredStatePool(PagedStatePool):
         if self.store is not None:
             owned.update(self.store.resident_pages())
         return owned
+
+    def sanitizer_check_leaks(self, what: str = "engine teardown") -> None:
+        """Tiered teardown additionally requires the prefetch ledger to be
+        settled: a staged prefetch whose request already retired would hold
+        its staging pages (and slab) forever -- exactly the leak an abort
+        racing an in-flight prefetch used to cause."""
+        shadow = getattr(self.placement, "_shadow", None)
+        if shadow is not None and self._staged:
+            from repro.analysis.lint.runtime import SanitizerError
+            raise SanitizerError(
+                "PL255", f"{len(self._staged)} staged prefetch(es) never "
+                f"committed or canceled at {what} "
+                f"(rids {sorted(self._staged)})")
+        super().sanitizer_check_leaks(what)
 
     def _enforce_store_capacity(self) -> None:
         over = self.store.over_capacity()

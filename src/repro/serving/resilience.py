@@ -1,0 +1,158 @@
+"""Graceful degradation primitives for the serving stack.
+
+The defense half of the resilience layer (:mod:`repro.serving.faults` is
+the attack half).  Nothing here knows about engines or pools; it provides
+the small, dependency-free mechanisms they compose:
+
+  * **blob checksums** -- every host-side blob (preemption spill, prefix
+    store demotion) carries a CRC32 recorded at extraction and verified at
+    resume/promote, so a corrupted byte is *detected* at the tier boundary
+    instead of silently poisoning decode.  :class:`BlobCorruption` is the
+    typed failure the engine recovers from (bounded re-prefill from the
+    request's retained token ids).
+  * **bounded retry** -- :func:`retry_transient` wraps an allocation-style
+    call (returns falsy on transient failure) in a bounded retry loop with
+    optional backoff; the PL206 lint rule requires alloc/pin call sites to
+    go through a wrapper like this (or an equivalent escalation path)
+    instead of asserting success.
+  * **the degradation ladder** -- :data:`LADDER` names the escalation
+    rungs admission walks when retries are exhausted: drop prefix-store
+    admission, demote store pages, preempt live work, shed queued work
+    with a ``rejected`` status.  The engine drives the walk; the ladder is
+    data so obs counters and docs stay in one vocabulary.
+  * **the step watchdog** -- :class:`StepWatchdog` flags steps exceeding a
+    wall-clock budget into the metrics/trace stream (it never kills work:
+    a slow step is a symptom to surface, not a request to drop).
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["BlobCorruption", "crc_blob", "corrupt_blob", "verify_blob",
+           "retry_transient", "LADDER", "StepWatchdog",
+           "RETRY_ATTEMPTS", "REPREFILL_CAP"]
+
+#: bounded-retry attempts at transient alloc/pin sites before escalating
+RETRY_ATTEMPTS = 3
+
+#: bounded re-prefills of one request after blob corruption before the
+#: request is declared ``failed``
+REPREFILL_CAP = 2
+
+#: the graceful-degradation ladder admission escalates through once
+#: bounded retries are exhausted, least to most disruptive
+LADDER = ("drop_prefix", "demote_store", "preempt", "shed")
+
+
+class BlobCorruption(RuntimeError):
+    """A host-tier blob failed its checksum at the device boundary."""
+
+    def __init__(self, what: str, rid: Optional[int] = None,
+                 expect: Optional[int] = None, got: Optional[int] = None):
+        self.what = what
+        self.rid = rid
+        self.expect = expect
+        self.got = got
+        where = f" (rid {rid})" if rid is not None else ""
+        super().__init__(
+            f"checksum mismatch on {what}{where}: "
+            f"expected {expect:#010x}, got {got:#010x}"
+            if expect is not None and got is not None
+            else f"checksum mismatch on {what}{where}")
+
+
+def crc_blob(blob: Sequence[np.ndarray]) -> int:
+    """CRC32 chained over a blob's arrays (order- and shape-sensitive)."""
+    crc = 0
+    for arr in blob:
+        a = np.ascontiguousarray(arr)
+        crc = zlib.crc32(str(a.shape).encode(), crc)
+        crc = zlib.crc32(a.view(np.uint8).reshape(-1), crc)
+    return crc & 0xFFFFFFFF
+
+
+def corrupt_blob(blob: List[np.ndarray]) -> None:
+    """Flip one byte of the first non-empty array (the injected
+    ``blob_corrupt`` payload; the blob's recorded CRC no longer matches).
+    Host blobs may be read-only views of device buffers, so the poisoned
+    array replaces the list entry instead of mutating in place."""
+    for i, arr in enumerate(blob):
+        if arr.size:
+            bad = np.array(arr)                   # writable copy
+            bad.reshape(-1).view(np.uint8)[0] ^= 0xFF
+            blob[i] = bad
+            return
+
+
+def verify_blob(blob: Sequence[np.ndarray], crc: Optional[int], what: str,
+                rid: Optional[int] = None) -> None:
+    """Raise :class:`BlobCorruption` when ``blob`` no longer matches the
+    ``crc`` recorded at extraction (None = unchecked legacy blob)."""
+    if crc is None:
+        return
+    got = crc_blob(blob)
+    if got != crc:
+        raise BlobCorruption(what, rid=rid, expect=crc, got=got)
+
+
+def retry_transient(fn: Callable[[], object], attempts: int = RETRY_ATTEMPTS,
+                    backoff_s: float = 0.0,
+                    on_retry: Optional[Callable[[int], None]] = None):
+    """Call ``fn`` until it returns truthy, up to ``attempts`` times.
+
+    The contract of allocation-style calls (``pool.register``/``grow``/
+    ``resume``, ``host.pin``): falsy means a *transient* shortage, an
+    exception means a real fault -- exceptions propagate immediately.
+    ``on_retry(k)`` observes the k-th retry (metrics).  Returns the last
+    result (falsy when every attempt failed: the caller escalates through
+    the degradation ladder)."""
+    result = fn()
+    for k in range(1, max(1, attempts)):
+        if result:
+            return result
+        if on_retry is not None:
+            on_retry(k)
+        if backoff_s > 0.0:
+            time.sleep(backoff_s * (2 ** (k - 1)))
+        result = fn()
+    return result
+
+
+class StepWatchdog:
+    """Wall-clock budget check for engine steps.
+
+    ``observe(step, dt)`` compares a step's duration against the budget
+    and reports trips through the supplied hooks; disabled (zero cost)
+    when the budget is None.  The watchdog only *flags* -- a slow step
+    feeds the obs stream (``watchdog_trips_total``, a ``cat="fault"``
+    instant), it never aborts work.
+    """
+
+    def __init__(self, budget_s: Optional[float], obs=None):
+        self.budget_s = budget_s
+        self.obs = obs
+        self.trips = 0
+        self.slowest_s = 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.budget_s is not None
+
+    def observe(self, step: int, dt: float) -> bool:
+        """True when the step blew its budget (after reporting it)."""
+        if self.budget_s is None:
+            return False
+        self.slowest_s = max(self.slowest_s, dt)
+        if dt <= self.budget_s:
+            return False
+        self.trips += 1
+        if self.obs is not None:
+            self.obs.metrics.counter("watchdog_trips_total").inc()
+            self.obs.tracer.instant(
+                "watchdog.slow_step", cat="fault", track="engine",
+                step=step, dt_s=dt, budget_s=self.budget_s)
+        return True

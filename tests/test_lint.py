@@ -243,10 +243,27 @@ PL_CASES = {
         """,
         """
         class Tiered:
-            def spill(self, rid, length):
+            def spill_with_retry(self, rid, length):
                 blob = self.extract(rid)
                 self.host.pin(rid, len(blob))
                 return blob
+        """,
+    ),
+    "PL206": (
+        """
+        class Engine:
+            def admit(self, req, pages):
+                self.pool.register(req.rid, pages)
+                return True
+        """,
+        """
+        class Engine:
+            def admit(self, req, pages):
+                ok = retry_transient(
+                    lambda: self.pool.register(req.rid, pages))
+                if not ok:
+                    self.degrade(req)
+                return bool(ok)
         """,
     ),
 }
