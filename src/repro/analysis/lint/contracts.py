@@ -30,8 +30,9 @@ from typing import Dict, List, Tuple
 
 from repro.analysis.lint.findings import Finding
 
-#: canonical dims covering every kind's traffic() accessors
-_CANON_DIMS = dict(B=2, T=None, KVH=4, dk=64, dv=64, n=1, H=8)
+#: canonical dims covering every kind's traffic() accessors (``Kq`` is the
+#: spec_verify query width; extra dims are inert for the other kinds)
+_CANON_DIMS = dict(B=2, T=None, KVH=4, dk=64, dv=64, n=1, H=8, Kq=4)
 
 
 def _loc(obj) -> Tuple[str, int]:
@@ -61,6 +62,7 @@ def lint_registry_contracts() -> List[Finding]:
     from repro.ops.base import SpuOp
     import repro.ops.attention      # noqa: F401  (populate the registry)
     import repro.ops.paged_ops      # noqa: F401
+    import repro.ops.spec_verify    # noqa: F401
     import repro.ops.state_update   # noqa: F401
 
     out: List[Finding] = []
@@ -128,6 +130,42 @@ def lint_registry_contracts() -> List[Finding]:
                 "RC304", f"{kind}[pallas:{fmt}:{layout}] has no jnp "
                 f"reference twin; parity tests and the fallback path "
                 f"cannot cover it", path, line))
+
+    # RC306: spec_verify amortizes the cache stream -- one verify pass over
+    # Kq query positions must cost at most what Kq sequential attn_decode
+    # steps would read (the speculative path can never be *worse* traffic
+    # than the steps it replaces), and every spec_verify quadruple needs an
+    # equivalent attn_decode to amortize against
+    Kq = _CANON_DIMS["Kq"]
+    for kind, backend, fmt, layout in quads:
+        if kind != "spec_verify":
+            continue
+        op = registry.get_op(kind, backend, fmt, layout)
+        path, line = _loc(op)
+        label = f"{kind}[{backend}:{fmt}:{layout}]"
+        if ("attn_decode", backend, fmt, layout) not in have:
+            out.append(Finding(
+                "RC306", f"{label} has no equivalent attn_decode quadruple; "
+                f"the verify pass replaces sequential decode steps and must "
+                f"have a baseline to amortize against", path, line))
+            continue
+        ad = registry.get_op("attn_decode", backend, fmt, layout)
+        try:
+            sv_t = op.traffic(_plan_for(op, fmt, T=2 * PAGE_TOKENS))
+            ad_t = ad.traffic(_plan_for(ad, fmt, T=2 * PAGE_TOKENS))
+        except Exception as e:
+            out.append(Finding(
+                "RC306", f"{label} traffic comparison raised "
+                f"{type(e).__name__}: {e}", path, line))
+            continue
+        if sv_t.state_read > Kq * ad_t.state_read + 1e-6:
+            out.append(Finding(
+                "RC306", f"{label} reads {sv_t.state_read:.1f}B of cache "
+                f"for Kq={Kq} positions, more than the {Kq} sequential "
+                f"attn_decode steps it replaces "
+                f"({Kq} x {ad_t.state_read:.1f}B); the verify pass must "
+                f"stream the cache at most once per step it amortizes",
+                path, line))
 
     # RC305: decode_op_plans covers every config, both layouts
     out += _check_config_coverage()

@@ -342,3 +342,75 @@ def generation_throughput(spec: ModelSpec, batch: int, seq_len: int,
                           sys: SystemConfig, system: str) -> float:
     lat = generation_step_latency(spec, batch, seq_len, sys, system)["total"]
     return batch / lat
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding (spec_verify workload)
+# ---------------------------------------------------------------------------
+
+def spec_verify_step_latency(spec: ModelSpec, batch: int, seq_len: int,
+                             k: int, sys: SystemConfig,
+                             system: str) -> Dict[str, float]:
+    """One speculative verify step over ``Kq = k + 1`` query positions.
+
+    The weight streams of projections/FFN are unchanged (weights stream
+    once regardless of how many positions ride the GEMM -- that is why
+    verification is nearly free on a bandwidth-bound step), recurrent state
+    updates run once per position, and attention streams the cache ONCE for
+    all positions through the ``spec_verify`` op's own traffic descriptor.
+    """
+    Kq = k + 1
+    w_bytes = 2.0 * spec.n_params
+    t_proj = max(w_bytes / sys.hbm_bw_bytes,
+                 2.0 * spec.n_params * batch * Kq / sys.gpu_flops)
+
+    fmt = SYSTEM_FMT[system]
+    t_state = 0.0
+    if spec.n_layers:
+        w = StateWorkload(batch, spec.n_layers, spec.n_heads, spec.dk,
+                          spec.dv, fmt)
+        if system in ("gpu", "gpu_q"):
+            t_state = gpu_state_update_latency(w, sys) * Kq
+        elif system == "gpu_pim":
+            t_state = pim_state_update_latency(w, sys,
+                                               "time_multiplexed") * Kq
+        else:
+            t_state = pim_state_update_latency(w, sys, "pimba") * Kq
+
+    t_attn = 0.0
+    if spec.attn_layers:
+        plan = _op_plan("spec_verify", fmt,
+                        dict(B=batch, T=seq_len, H=spec.attn_kv_heads,
+                             KVH=spec.attn_kv_heads, dk=spec.attn_head_dim,
+                             dv=spec.attn_head_dim, n=1, Kq=Kq))
+        kv_bytes = _op_traffic(plan).state_read * spec.attn_layers
+        if system in ("gpu", "gpu_q"):
+            t_attn = kv_bytes * GPU_ATTN_PASSES / sys.hbm_bw_bytes
+        else:
+            h = sys.hbm
+            bursts = kv_bytes / h.burst_bytes / (sys.n_stacks
+                                                 * h.pseudo_channels)
+            per_burst = h.tCCD_L if system == "pimba" else h.tCCD_L * 1.5
+            t_attn = bursts * per_burst * h.cycle_s
+    return {"proj": t_proj, "state": t_state, "attn": t_attn,
+            "total": t_proj + t_state + t_attn}
+
+
+def expected_tokens_per_spec_step(k: int, acceptance: float) -> float:
+    """Expected emitted tokens of one verify step at per-draft acceptance
+    probability ``a``: 1 + a + a^2 + ... + a^k (every step emits at least
+    the model's own token, each consecutive accepted draft adds one)."""
+    assert 0.0 <= acceptance <= 1.0
+    if acceptance >= 1.0:
+        return float(k + 1)
+    return (1.0 - acceptance ** (k + 1)) / (1.0 - acceptance)
+
+
+def spec_generation_throughput(spec: ModelSpec, batch: int, seq_len: int,
+                               k: int, acceptance: float, sys: SystemConfig,
+                               system: str) -> float:
+    """Tokens/s of speculative serving: verify-step latency amortized over
+    the expected accepted tokens (draft-source cost assumed off-device)."""
+    lat = spec_verify_step_latency(spec, batch, seq_len, k, sys,
+                                   system)["total"]
+    return batch * expected_tokens_per_spec_step(k, acceptance) / lat

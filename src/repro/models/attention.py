@@ -260,6 +260,32 @@ def attention_decode(p: L.Params, x: jnp.ndarray, cache: AC.KVCache,
     return (o.reshape(B, 1, H * dh).astype(x.dtype) @ p["wo"]), cache
 
 
+def attention_spec_decode(p: L.Params, x: jnp.ndarray, cache: AC.KVCache,
+                          cfg: ModelConfig, positions: jnp.ndarray, seed,
+                          n_heads: Optional[int] = None,
+                          n_kv: Optional[int] = None
+                          ) -> Tuple[jnp.ndarray, AC.KVCache]:
+    """Speculative decode: x (B, n, d) -> (out (B, n, d), updated cache).
+
+    Appends all n K/V rows (per-position seeds ``seed + i``), then verifies
+    the n queries in one ``spec_verify`` pass -- position j's row is
+    bit-identical to the j-th sequential :func:`attention_decode` call.
+    """
+    B, n, d = x.shape
+    H = n_heads or cfg.n_heads
+    KVH = n_kv or cfg.n_kv_heads
+    dh = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, n, H, dh)
+    k = (x @ p["wk"]).reshape(B, n, KVH, dh)
+    v = (x @ p["wv"]).reshape(B, n, KVH, dh)
+    if cfg.pos_emb == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    o, cache = OPS.attention_spec_step(cache, k, v, q, cfg.state_quant,
+                                       seed=seed)
+    return (o.reshape(B, n, H * dh).astype(x.dtype) @ p["wo"]), cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2), absorbed form
 # ---------------------------------------------------------------------------
@@ -342,3 +368,19 @@ def mla_decode(p: L.Params, x: jnp.ndarray, cache: AC.KVCache,
                                            seed=seed)  # (B,H,kv_lora)
     o = jnp.einsum("bhc,hcv->bhv", ctx.astype(x.dtype), p["w_uv"])
     return o.reshape(B, 1, H * m.v_dim) @ p["wo"], cache
+
+
+def mla_spec_decode(p: L.Params, x: jnp.ndarray, cache: AC.KVCache,
+                    cfg: ModelConfig, positions: jnp.ndarray, seed
+                    ) -> Tuple[jnp.ndarray, AC.KVCache]:
+    """Speculative MLA decode over n positions (see attention_spec_decode)."""
+    m = cfg.mla
+    B, n, _ = x.shape
+    H = cfg.n_heads
+    q = _mla_queries(p, x, cfg, positions)                # (B, n, H, cw)
+    ckv = _mla_cache_stream(p, x, cfg, positions)[:, :, None, :]  # (B,n,1,cw)
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    ctx, cache = OPS.attention_spec_step(cache, ckv, None, q, cfg.state_quant,
+                                         scale=scale, seed=seed)
+    o = jnp.einsum("bnhc,hcv->bnhv", ctx.astype(x.dtype), p["w_uv"])
+    return o.reshape(B, n, H * m.v_dim) @ p["wo"], cache

@@ -609,3 +609,194 @@ def paged_decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     x = L.apply_norm(params["final_norm"], x[:, 0], cfg.norm_kind, cfg.norm_eps)
     logits = x @ _lm_head(params, cfg)
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# speculative decode: multi-position step with per-position state snapshots
+# ---------------------------------------------------------------------------
+
+def _state_snapshot(cache: Any) -> Any:
+    """Per-request rows of every recurrent-state leaf of one element's cache.
+
+    PagedState views contribute their viewed slab rows ``pool[slabs, group]``
+    ((B, ...); quantized pools yield a plain ``{field: rows}`` dict), dense
+    residual leaves (conv tails, sLSTM carries) contribute themselves, and
+    KV caches contribute nothing (rejecting drafted tokens only needs the
+    host length reset -- the garbage rows are masked and later overwritten).
+    """
+    from repro.core import paged as PG
+
+    def snap(leaf):
+        if isinstance(leaf, PG.PagedState):
+            grp = jnp.asarray(leaf.group, jnp.int32)
+            if isinstance(leaf.pool, F.QuantizedTensor):
+                return {f: a[leaf.slabs, grp]
+                        for f, a in leaf.pool.payload.items()}
+            return leaf.pool[leaf.slabs, grp]
+        if isinstance(leaf, PG.PagedKVCache):
+            return None
+        return leaf
+
+    return jax.tree.map(snap, cache, is_leaf=PG.is_paged)
+
+
+def _element_spec_decode(p: Params, x, cache, cfg: ModelConfig, kind: str,
+                         positions, seed) -> Tuple[jnp.ndarray, Any, Any]:
+    """Multi-position twin of :func:`_element_decode`.
+
+    ``x`` is (B, n, d) -- the current token plus the drafted ones --
+    and ``positions`` the (B, n) absolute positions.  Attention scores all
+    n positions in one ``spec_verify`` pass over a single cache stream;
+    recurrent mixers advance sequentially through the n rows (the state
+    update is inherently serial) with the exact per-position seed
+    ``seed + i`` of n sequential decode steps, recording a state snapshot
+    after each position so rejected drafts can be rolled back bit-exactly.
+
+    Returns ``(x, cache, snap)`` where ``snap`` stacks the per-position
+    snapshots to (n, B, ...) leaves (None for attention elements).
+    """
+    n = x.shape[1]
+    h = L.apply_norm(p["norm"], x, cfg.norm_kind, cfg.norm_eps)
+    if kind == "attn":
+        y, cache = ATT.attention_spec_decode(p["mixer"], h, cache, cfg,
+                                             positions, seed)
+        snap = None
+    elif kind == "mla":
+        y, cache = ATT.mla_spec_decode(p["mixer"], h, cache, cfg,
+                                       positions, seed)
+        snap = None
+    else:
+        ys, rows = [], []
+        for i in range(n):
+            hi = h[:, i:i + 1]
+            si = seed + jnp.uint32(i)
+            if kind == "mamba2":
+                yi, cache = SSM.mamba2_decode(p["mixer"], hi, cache, cfg, si)
+            elif kind in ("gla", "retnet", "hgrn2"):
+                yi, cache = SSM.gla_family_decode(p["mixer"], hi, cache, cfg,
+                                                  kind, si)
+            elif kind == "mlstm":
+                yi, cache = SSM.mlstm_decode(p["mixer"], hi, cache, cfg, si)
+            elif kind == "slstm":
+                yi, cache = SSM.slstm_decode(p["mixer"], hi, cache, cfg, si)
+            else:
+                raise ValueError(kind)
+            ys.append(yi)
+            rows.append(_state_snapshot(cache))
+        y = jnp.concatenate(ys, axis=1)
+        snap = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+    x = x + y
+    if _has_ffn(cfg, kind):
+        h = L.apply_norm(p["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        if cfg.ffn_kind == "moe" and "router" in p["ffn"]:
+            y = L.apply_moe(p["ffn"], h, cfg, None)
+        elif cfg.ffn_kind == "moe":
+            y = L.apply_ffn(p["ffn"], h, cfg.ffn_kind_inner)
+        else:
+            y = L.apply_ffn(p["ffn"], h, cfg.ffn_kind)
+        x = x + y
+    return x, cache, snap
+
+
+def paged_spec_decode_step(params: Params, cfg: ModelConfig,
+                           tokens: jnp.ndarray, caches: Any,
+                           lengths: jnp.ndarray, seed=0, mesh_axes=None
+                           ) -> Tuple[jnp.ndarray, Any, Any]:
+    """Speculative verify step: n positions per row through the paged caches.
+
+    tokens (B, n) holds each row's current token followed by its drafted
+    (or garbage padding) tokens; lengths (B,) count positions *before* this
+    step.  Structure, carry discipline and every element seed mirror
+    :func:`paged_decode_step` exactly -- position i of a row runs with the
+    seeds of the sequential decode step ``seed + i`` -- so row i's logits
+    are bit-identical to decoding the same tokens one step at a time.
+
+    Returns ``(logits (B, n, V), new_caches, snaps)``.  ``snaps`` mirrors
+    the cache-tree structure with per-position recurrent-state rows
+    normalized to (n, B, ...) leaves ((n, B, G, ...) for scanned groups);
+    the engine commits ``snaps[sel]`` to roll rejected positions back.
+    """
+    from repro.core import paged as PG
+    assert not cfg.encoder_only, f"{cfg.name} is encoder-only: no decode step"
+    B, n = tokens.shape
+    x = params["embed"][tokens]                                # (B,n,d)
+    positions = lengths[:, None] + jnp.arange(n, dtype=lengths.dtype)[None]
+    if cfg.pos_emb == "learned":
+        x = x + params["pos"][positions]
+    shared = params.get("shared")
+
+    if cfg.prelude:
+        prelude_caches, caches = caches["prelude"], caches["groups"]
+        new_prelude, prelude_snaps = [], []
+        for i, kind in enumerate(cfg.prelude):
+            c = PG.with_group(prelude_caches[i], 0, lengths)
+            x, c, sn = _element_spec_decode(
+                params["prelude"][i], x, c, cfg, kind, positions,
+                jnp.uint32(seed) + jnp.uint32(7919 * (i + 1)))
+            new_prelude.append(c)
+            prelude_snaps.append(sn)
+
+    n_elems = len(cfg.pattern) + (1 if shared is not None else 0)
+    carried, scanned = [], []
+    for pos in range(n_elems):
+        ca, sc = PG.split_paged(caches[pos])
+        carried.append(ca)
+        scanned.append(sc)
+    carried, scanned = tuple(carried), tuple(scanned)
+
+    def group_body(carry, ginp):
+        x, kv = carry
+        gparams, gstates, gidx = ginp
+        seed_g = jnp.uint32(seed) + gidx.astype(jnp.uint32) * jnp.uint32(_SEED_STRIDE)
+        new_kv, new_states, gsnaps = [], [], []
+        for pos, kind in enumerate(cfg.pattern):
+            c = PG.merge_paged(PG.with_group(kv[pos], gidx, lengths),
+                               gstates[pos])
+            x, c, sn = _element_spec_decode(gparams[pos], x, c, cfg, kind,
+                                            positions,
+                                            seed_g + jnp.uint32(pos + 1))
+            ca, sc = PG.split_paged(c)
+            new_kv.append(ca)
+            new_states.append(sc)
+            gsnaps.append(sn)
+        if shared is not None:
+            h = L.apply_norm(shared["norm"], x, cfg.norm_kind, cfg.norm_eps)
+            y, c = ATT.attention_spec_decode(
+                shared["attn"], h, PG.with_group(kv[-1], gidx, lengths), cfg,
+                positions, seed_g + jnp.uint32(99))
+            x = x + y
+            h = L.apply_norm(shared["ffn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + L.apply_ffn(shared["ffn"], h, cfg.ffn_kind)
+            new_kv.append(c)
+            new_states.append(None)
+            gsnaps.append(None)
+        return (x, tuple(new_kv)), (tuple(new_states), tuple(gsnaps))
+
+    if cfg.scan_layers:
+        (x, carried), (new_scanned, gsnaps) = jax.lax.scan(
+            group_body, (x, carried),
+            (params["groups"], scanned, jnp.arange(cfg.n_groups)))
+    else:
+        stacked = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            gs = jax.tree.map(lambda a: a[g], scanned,
+                              is_leaf=lambda v: isinstance(v, jnp.ndarray))
+            (x, carried), ys = group_body((x, carried),
+                                          (gp, gs, jnp.asarray(g)))
+            stacked.append(ys)
+        new_scanned, gsnaps = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+
+    # scan ys stack per-group snapshots as (G, n, B, ...); normalize every
+    # snapshot leaf to position-major (n, B, G, ...) for selection
+    gsnaps = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 2), gsnaps)
+
+    new_caches = tuple(PG.merge_paged(carried[pos], new_scanned[pos])
+                       for pos in range(n_elems))
+    snaps: Any = tuple(gsnaps)
+    if cfg.prelude:
+        new_caches = {"prelude": tuple(new_prelude), "groups": new_caches}
+        snaps = {"prelude": tuple(prelude_snaps), "groups": snaps}
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    logits = x @ _lm_head(params, cfg)
+    return logits, new_caches, snaps

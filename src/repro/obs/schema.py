@@ -36,6 +36,8 @@ FEATURES = {
               "tier promote/demote/hit instants (cat='tier')",
     "resilience": "fault-layer instants (cat='fault'): injections, "
                   "quarantines, watchdog trips, degradation rungs",
+    "speculation": "per-step 'spec' C counter events (proposed/accepted "
+                   "draft tokens from the speculative decode path)",
 }
 
 
@@ -123,6 +125,8 @@ def trace_features(obj) -> Set[str]:
             feats.add("resilience")
         if ph == "C" and "bank" in str(ev.get("name", "")):
             feats.add("bank")
+        if ph == "C" and ev.get("name") == "spec":
+            feats.add("speculation")
         if ph in ("i", "I") and cat == "jit":
             feats.add("recompile")
             args = ev.get("args") or {}

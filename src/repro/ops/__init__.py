@@ -38,6 +38,7 @@ from repro.ops.attention import (attention_decode_step, attn_decode,
                                  attn_kind_of, kv_append,
                                  plan_attn_decode_dims)
 import repro.ops.paged_ops  # noqa: F401  (registers the paged-layout ops)
+from repro.ops.spec_verify import (attention_spec_step, spec_attend)
 from repro.core.paged import PagedKVCache, PagedState
 from repro.ops.model_traffic import (OpTrafficEntry, decode_op_plans,
                                      decode_traffic_by_kind)
@@ -52,6 +53,7 @@ __all__ = [
     "state_nbytes", "state_update_float", "state_update_step",
     "attention_decode_step", "attn_decode", "attn_kind_of", "kv_append",
     "plan_attn_decode_dims",
+    "attention_spec_step", "spec_attend",
     "PagedKVCache", "PagedState",
     "OpTrafficEntry", "decode_op_plans", "decode_traffic_by_kind",
 ]

@@ -55,7 +55,8 @@ def _state_dims(cfg, kind: str):
 
 
 def decode_op_plans(cfg, batch: int, seq_len: int,
-                    layout: str = "dense") -> List[OpTrafficEntry]:
+                    layout: str = "dense",
+                    spec_k: int = 0) -> List[OpTrafficEntry]:
     """Every SPU op one decode step runs for ``cfg``, with layer counts.
 
     ``seq_len`` is the cached context length the attention ops stream.
@@ -64,8 +65,13 @@ def decode_op_plans(cfg, batch: int, seq_len: int,
     ``layout="paged"`` enumerates the block-table-native ops instead: their
     traffic is page-granular (whole 128-token pages stream, appends write
     one slot), which is what the paged engine and the PIM bank model score.
+    ``spec_k > 0`` describes one *speculative* step at ``Kq = spec_k + 1``
+    query positions: attention streams through ``spec_verify`` (one cache
+    stream for all positions), appends and recurrent-state updates run once
+    per position.
     """
     quant = cfg.state_quant
+    Kq = spec_k + 1
     entries: List[OpTrafficEntry] = []
 
     def layer_count(kind: str) -> int:
@@ -84,7 +90,7 @@ def decode_op_plans(cfg, batch: int, seq_len: int,
         entries.append(OpTrafficEntry(
             "state_update",
             plan_state_update_dims(batch, H, dk, dv, quant, layout=layout),
-            n))
+            n * Kq))    # recurrent updates run once per verify position
 
     # -- attention decode + the token append that feeds it -------------
     from repro.ops.attention import plan_attn_decode_dims
@@ -93,25 +99,41 @@ def decode_op_plans(cfg, batch: int, seq_len: int,
         dims = dict(B=batch, T=seq_len, KVH=cfg.n_kv_heads,
                     dk=cfg.head_dim, dv=cfg.head_dim, n=1,
                     H=cfg.n_heads)
-        entries.append(OpTrafficEntry(
-            "attn_decode", plan_attn_decode_dims("attn_decode", dims, quant,
-                                                 layout=layout),
-            n_attn))
+        if spec_k > 0:
+            entries.append(OpTrafficEntry(
+                "spec_verify",
+                registry.plan("spec_verify", dict(dims, Kq=Kq), quant,
+                              quant.backend, layout=layout), n_attn))
+        else:
+            entries.append(OpTrafficEntry(
+                "attn_decode",
+                plan_attn_decode_dims("attn_decode", dims, quant,
+                                      layout=layout),
+                n_attn))
         entries.append(OpTrafficEntry(
             "kv_append", registry.plan("kv_append", dims, quant,
-                                       quant.backend, layout=layout), n_attn))
+                                       quant.backend, layout=layout),
+            n_attn * Kq))
     n_mla = layer_count("mla")
     if n_mla and cfg.mla is not None:
         dims = dict(B=batch, T=seq_len, KVH=1, dk=cfg.mla.cache_width,
                     dv=0, n=1, H=cfg.n_heads)
-        entries.append(OpTrafficEntry(
-            "mla_decode",
-            plan_attn_decode_dims("mla_decode", dims, quant,
-                                  v_width=cfg.mla.kv_lora, layout=layout),
-            n_mla))
+        if spec_k > 0:
+            entries.append(OpTrafficEntry(
+                "spec_verify",
+                registry.plan("spec_verify", dict(dims, Kq=Kq), quant,
+                              quant.backend, layout=layout,
+                              v_width=cfg.mla.kv_lora), n_mla))
+        else:
+            entries.append(OpTrafficEntry(
+                "mla_decode",
+                plan_attn_decode_dims("mla_decode", dims, quant,
+                                      v_width=cfg.mla.kv_lora, layout=layout),
+                n_mla))
         entries.append(OpTrafficEntry(
             "kv_append", registry.plan("kv_append", dims, quant,
-                                       quant.backend, layout=layout), n_mla))
+                                       quant.backend, layout=layout),
+            n_mla * Kq))
     return entries
 
 

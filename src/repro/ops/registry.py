@@ -14,6 +14,10 @@ Op kinds
 ``attn_decode``   -- one-token GQA attention over a packed KV cache
 ``mla_decode``    -- one-token MLA attention over the compressed latent cache
 ``kv_append``     -- quantize + scatter new K/V (or latent) rows into a cache
+``spec_verify``   -- speculative-decode verification: attention over ``Kq``
+                     query positions against one cache stream (the weight and
+                     page reads of a single decode step amortized over the
+                     drafted tokens; ``Kq=1`` degenerates to ``attn_decode``)
 
 Layouts
 -------
@@ -35,7 +39,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.ops.base import (LAYOUTS, OpPlan, SpuOp, StateQuantConfig,
                             TrafficBytes)
 
-OP_KINDS = ("state_update", "attn_decode", "mla_decode", "kv_append")
+OP_KINDS = ("state_update", "attn_decode", "mla_decode", "kv_append",
+            "spec_verify")
 
 #: backend preference for capability negotiation ("auto" requests)
 BACKEND_PREFERENCE = ("pallas", "jnp")

@@ -95,6 +95,11 @@ class ServeConfig:
                                        # excess submits end ``rejected``
     request_timeout_s: Optional[float] = None  # max queue wait -> rejected
     step_budget_s: Optional[float] = None      # watchdog wall-clock budget
+    # --- speculative decoding (paged backend only) ---
+    spec: Optional[str] = None         # draft source: "ngram" (self-draft)
+                                       # or "model:<arch>" (small model)
+    spec_k: int = 3                    # max drafts verified per step
+    spec_window: int = 8               # k-controller acceptance window
 
     def __post_init__(self):
         if self.backend not in ("paged", "slots"):
@@ -103,6 +108,10 @@ class ServeConfig:
         if self.backend == "slots" and self.prefix_cache:
             raise ValueError("prefix_cache needs the paged backend "
                              "(page refcounts / block tables)")
+        if self.backend == "slots" and self.spec is not None:
+            raise ValueError("speculative decoding needs the paged backend "
+                             "(the spec_verify step walks block tables and "
+                             "rolls state slabs back)")
         if self.backend == "slots":
             for f in ("fault_plan", "nan_guard", "max_queued",
                       "request_timeout_s", "step_budget_s"):
@@ -136,7 +145,10 @@ class ServeConfig:
             nan_guard=self.nan_guard,
             max_queued=self.max_queued,
             request_timeout_s=self.request_timeout_s,
-            step_budget_s=self.step_budget_s)
+            step_budget_s=self.step_budget_s,
+            spec=self.spec,
+            spec_k=self.spec_k,
+            spec_window=self.spec_window)
 
 
 class RequestHandle:

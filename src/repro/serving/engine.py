@@ -46,7 +46,7 @@ from repro.models.config import ModelConfig
 from repro.serving.faults import FaultPlan
 from repro.serving.resilience import (REPREFILL_CAP, BlobCorruption,
                                       StepWatchdog, retry_transient)
-from repro.serving.sampler import SamplingConfig, sample
+from repro.serving.sampler import SamplingConfig, filtered_probs, sample
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 #: terminal request statuses -- a request in one of these will never
@@ -351,6 +351,18 @@ class _EngineCore:
         out["p50_tok_latency_s"] = tok.percentile(50)
         out["p99_tok_latency_s"] = tok.percentile(99)
         out["recompiles"] = float(self.obs.recompiles.n_events)
+        # speculation accounting is schema-stable: zeros when speculation is
+        # off (or on engines without it) so downstream consumers never key-miss
+        proposed = m.value("spec_proposed_tokens_total")
+        accepted = m.value("spec_accepted_tokens_total")
+        steps = m.value("spec_verify_steps_total")
+        out["proposed_tokens"] = proposed
+        out["accepted_tokens"] = accepted
+        out["acceptance_rate"] = accepted / proposed if proposed else 0.0
+        # each verify row-step emits the accepted drafts plus one token the
+        # target model produced itself, so the floor is 1.0, not 0.0
+        out["accepted_tokens_per_step"] = ((accepted + steps) / steps
+                                           if steps else 0.0)
         out.update(self._traffic.stats())
         return out
 
@@ -620,6 +632,13 @@ class PagedEngineConfig:
                                       # this queue depth are ``rejected``
     request_timeout_s: Optional[float] = None  # queued longer -> ``rejected``
     step_budget_s: Optional[float] = None      # watchdog wall-clock budget
+    # --- speculative decoding (serving/spec) ---
+    spec: Optional[str] = None        # draft source: None (off), "ngram"
+                                      # (self-drafting) or "model:<arch>"
+                                      # (small-model drafting)
+    spec_k: int = 3                   # max drafts per row; the verify step
+                                      # always compiles at spec_k+1 positions
+    spec_window: int = 8              # acceptance window of the k-controller
 
 
 @dataclasses.dataclass
@@ -684,6 +703,33 @@ class PagedServingEngine(_EngineCore):
         max_chunk_pages = pages_for(pcfg.prefill_chunk)
         assert max_chunk_pages <= self.pool.usable_pages, \
             "prefill_chunk does not fit the page pool"
+        # --- speculative decoding (serving/spec) ---
+        self.draft = None
+        self.kctl = None
+        if pcfg.spec is not None:
+            from repro.serving.spec import (KController, ModelDraft,
+                                            NGramDraft)
+            assert pcfg.spec_k >= 1, "spec_k must be at least 1"
+            if pcfg.spec == "ngram":
+                self.draft = NGramDraft()
+            elif pcfg.spec.startswith("model:"):
+                from repro.configs import get_smoke_config
+                dcfg = get_smoke_config(pcfg.spec.split(":", 1)[1]).with_(
+                    state_quant=cfg.state_quant)
+                # the draft pool is deliberately NOT obs-wrapped: its jits
+                # are warmup-only per draft request and must not count
+                # against the target engine's decode recompile budget
+                self.draft = ModelDraft(
+                    dcfg, max_requests=pcfg.max_decode_batch + 1,
+                    seed=pcfg.seed)
+            else:
+                raise ValueError(
+                    f"unknown spec draft source {pcfg.spec!r} "
+                    "(expected 'ngram' or 'model:<arch>')")
+            self.kctl = KController(pcfg.spec_k, window=pcfg.spec_window)
+            # per-position seeds inside the verify step are spec_seed + i,
+            # so advance by n per step to keep the streams non-overlapping
+            self._spec_seed = 0
 
     # ------------- lifecycle -------------
 
@@ -762,6 +808,7 @@ class PagedServingEngine(_EngineCore):
         if rid in self.active:
             a = self.active.pop(rid)
             self._free_row(rid)
+            self._spec_release(rid)
             self.pool.release(rid)
             self._finalize(a.req, "aborted")
             return True
@@ -949,9 +996,22 @@ class PagedServingEngine(_EngineCore):
     def _assign_row(self, rid: int):
         row = self.rows.index(None)
         self.rows[row] = rid
+        if self.draft is not None and rid in self.active:
+            # draft-side admission is best-effort: a refusal (draft pool
+            # full) just means this request decodes without drafts for now
+            self.draft.admit(rid, list(map(int, self.active[rid].req.prompt)))
 
     def _free_row(self, rid: int):
         self.rows[self.rows.index(rid)] = None
+
+    def _spec_release(self, rid: int) -> None:
+        """Drop every speculation-side trace of a terminal request: drafted-
+        but-unverified tokens die with the draft state (they were never in
+        ``req.output``), draft-model pages free, acceptance history resets."""
+        if self.draft is not None:
+            self.draft.release(rid)
+        if self.kctl is not None:
+            self.kctl.forget(rid)
 
     def _bucket_prefill_len(self, n: int) -> int:
         """Full-sequence prefill length for an ``n``-token prompt.
@@ -1114,6 +1174,8 @@ class PagedServingEngine(_EngineCore):
         request goes back to the scheduler queue."""
         a = self.active.pop(rid)
         self._free_row(rid)
+        if self.draft is not None:
+            self.draft.suspend(rid)
         sp = self.pool.spill(rid, a.length)
         self.spilled[rid] = (sp, a.pending, a.cur_token)
         a.req.status = "queued"
@@ -1125,6 +1187,7 @@ class PagedServingEngine(_EngineCore):
     def _finish(self, rid: int, truncated: bool = False):
         a = self.active.pop(rid)
         self._free_row(rid)
+        self._spec_release(rid)
         if a.req.retain and not truncated:
             # keep the pages pinned: this request is now a fork parent
             self.retained[rid] = a
@@ -1133,12 +1196,17 @@ class PagedServingEngine(_EngineCore):
         self._finalize(a.req, "truncated" if truncated else "done")
 
     def _ensure_headroom(self):
-        """Every active request must own the page its next token writes."""
+        """Every active request must own the page its next token writes --
+        and with speculation on, every page an *accepted* draft could write:
+        a generation row may commit up to ``spec_k + 1`` tokens per step,
+        none of which may land on the shared scratch page."""
         for rid in list(self.active):
             a = self.active.get(rid)
             if a is None:
                 continue
-            needed = a.length // PAGE_TOKENS + 1
+            span = (self.pcfg.spec_k
+                    if self.draft is not None and not a.pending else 0)
+            needed = (a.length + span) // PAGE_TOKENS + 1
             while needed > len(self.pool.page_table[rid]):
                 short = needed - len(self.pool.page_table[rid])
                 if self._retry("alloc",
@@ -1154,6 +1222,9 @@ class PagedServingEngine(_EngineCore):
     # ------------- the decode step -------------
 
     def _decode_step(self):
+        if self.draft is not None:
+            self._spec_decode_step()
+            return
         self.step_count += 1
         B = self.pcfg.max_decode_batch
         tokens = np.zeros((B,), np.int32)
@@ -1255,6 +1326,213 @@ class PagedServingEngine(_EngineCore):
             if len(req.output) >= req.max_new_tokens or hit_eos:
                 self._finish(rid)
 
+    # ------------- the speculative decode step -------------
+
+    def _spec_decode_step(self):
+        """One continuous-batching step with speculative verification.
+
+        Every active row rides the same fused ``spec_verify`` pass at the
+        fixed compiled width ``n = spec_k + 1`` (so the recompile watcher
+        stays at the warmup count): generation rows carry their current
+        token plus up to ``k`` drafted continuations, prompt-streaming rows
+        carry one real position padded with garbage.  Afterwards the model
+        state is rolled back per row to exactly the accepted prefix
+        (``commit_spec``), which also unwinds the garbage positions the
+        padding pushed through the recurrent state.
+
+        Greedy rows emit the model's own argmax stream -- drafts only decide
+        how many of those tokens one pass may confirm -- so greedy output is
+        bit-identical to non-speculative decoding.  Sampled rows use
+        rejection sampling against :func:`filtered_probs`, which preserves
+        the non-speculative sampling distribution.
+        """
+        self.step_count += 1
+        B = self.pcfg.max_decode_batch
+        n = self.pcfg.spec_k + 1
+        tokens = np.zeros((B, n), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        drafts: Dict[int, List[int]] = {}
+        for row, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            a = self.active[rid]
+            lengths[row] = a.length
+            if a.pending:
+                tokens[row, 0] = a.pending[0]   # positions 1.. are garbage
+                continue
+            # the budget keeps one fully-accepted step inside the request's
+            # remaining token allowance, so emitted tokens never need a
+            # post-hoc cut that would desync length from committed state
+            budget = min(self.kctl.k_for(rid), self.pcfg.spec_k,
+                         a.req.max_new_tokens - len(a.req.output) - 1)
+            d = []
+            if budget > 0:
+                ctx = list(map(int, a.req.prompt)) + list(a.req.output)
+                d = [int(t) for t in
+                     self.draft.propose(rid, ctx, budget)[:budget]]
+            drafts[rid] = d
+            tokens[row, 0] = a.cur_token
+            tokens[row, 1:1 + len(d)] = d
+        c0 = self.obs.recompiles.n_events
+        t0 = time.perf_counter()
+        if self.faults is not None and self.faults.should_fire("slow_step"):
+            stall_s = self.faults.param("slow_step", "ms") / 1000.0
+            self.obs.metrics.counter("faults_injected_total",
+                                     site="slow_step").inc()
+            self.obs.tracer.instant("fault.slow_step", cat="fault",
+                                    track="engine", ms=stall_s * 1e3)
+            time.sleep(stall_s)
+        # every row's block table must span the garbage positions too, or
+        # an out-of-width page index would clamp onto a live physical page
+        min_pages = max(pages_for(int(lengths[row]) + n)
+                        for row, rid in enumerate(self.rows)
+                        if rid is not None)
+        seed = self._spec_seed
+        self._spec_seed += n
+        logits, snaps = self.pool.decode_spec(
+            self.params, self.rows, tokens, lengths, seed=seed,
+            min_pages=min_pages)
+        if self.faults is not None:
+            logits = self._inject_nan(logits)
+        bad_rows = self._scan_nonfinite(logits) if self._nan_guard else ()
+        greedy = self.pcfg.sampling.temperature <= 0.0
+        if greedy:
+            # same device op as the sampler's greedy branch, so ties break
+            # identically to non-speculative decoding
+            g = np.asarray(jnp.argmax(logits, axis=-1))
+        else:
+            probs = np.asarray(filtered_probs(logits, self.pcfg.sampling))
+        sel = np.zeros((B,), np.int32)
+        emits: Dict[int, List[int]] = {}
+        for row, rid in enumerate(self.rows):
+            if rid is None or row in bad_rows:
+                continue
+            a = self.active[rid]
+            if a.pending:
+                continue                      # single real position: sel = 0
+            d = drafts.get(rid, [])
+            if greedy:
+                m = 0
+                while m < len(d) and d[m] == int(g[row, m]):
+                    m += 1
+                emit = [int(g[row, j]) for j in range(m + 1)]
+            else:
+                rng = np.random.default_rng(
+                    (self.pcfg.seed, self.step_count, row))
+                emit = []
+                for j, t in enumerate(d):
+                    pj = probs[row, j]
+                    pj = pj / pj.sum()
+                    if rng.random() < pj[t]:
+                        emit.append(t)        # accepted with probability p(t)
+                        continue
+                    # rejected: the correction comes from the residual
+                    # distribution max(0, p - q) with the one-hot draft q
+                    q = pj.copy()
+                    q[t] = 0.0
+                    s = q.sum()
+                    if s <= 0.0:
+                        emit.append(t)        # p was a point mass on t
+                        continue
+                    emit.append(int(rng.choice(len(q), p=q / s)))
+                    break
+                else:
+                    pj = probs[row, len(d)]
+                    emit.append(int(rng.choice(len(pj), p=pj / pj.sum())))
+            if a.req.eos_id is not None and a.req.eos_id in emit:
+                emit = emit[:emit.index(a.req.eos_id) + 1]
+            sel[row] = len(emit) - 1
+            emits[rid] = emit
+        # roll state back to the accepted prefix *before* any host-side
+        # bookkeeping -- every row (prompt rows included: their garbage
+        # padding advanced recurrent state too) needs its slab restored
+        self.pool.commit_spec(self.rows, snaps, sel)
+        self._record_step(t0, time.perf_counter() - t0,
+                          compiled=self.obs.recompiles.n_events > c0,
+                          batch=sum(1 for r in self.rows if r is not None))
+        # one cache stream serves the whole verify span: account the pages
+        # attended at length + n once, amortized over the accepted tokens
+        seen_pages = set()
+        units = []
+        for row, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            npg = min(pages_for(int(lengths[row]) + n),
+                      len(self.pool.page_table[rid]))
+            fresh = [p for p in self.pool.page_table[rid][:npg]
+                     if p not in seen_pages]
+            seen_pages.update(fresh)
+            units.append(max(len(fresh), 1))
+        self._traffic.account_units(units)
+        rids = [r for r in self.rows if r is not None]
+        self.last_traffic = self.pool.bank_traffic(rids)
+        self._occ.append(self.pool.occupancy())
+        self._frag.append(self.pool.fragmentation(
+            {r: self.active[r].length for r in rids}))
+        self.obs.tracer.counter(
+            "bank_traffic", pimsim.bank_trace_counters(self.last_traffic))
+        self.obs.tracer.counter(
+            "pool", {"occupancy": self._occ[-1],
+                     "fragmentation": self._frag[-1]})
+        n_proposed = n_accepted = n_steps = 0
+        for row, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            if row in bad_rows:
+                self._fail_active(rid, "non-finite logits after decode step")
+                continue
+            a = self.active[rid]
+            if a.pending:
+                a.length += 1
+                if (a.req.parent_rid is None
+                        and not a.replayed
+                        and a.length % PAGE_TOKENS == 0
+                        and a.length <= len(a.req.prompt)):
+                    self.pool.store_insert(rid, a.req.prompt[:a.length])
+                fed = a.pending.pop(0)
+                a.cur_token = fed
+                if a.pending:
+                    continue
+                tok = (int(g[row, 0]) if greedy else int(
+                    np.random.default_rng(
+                        (self.pcfg.seed, self.step_count, row)
+                    ).choice(probs.shape[-1],
+                             p=probs[row, 0] / probs[row, 0].sum())))
+                if not a.req.t_first:
+                    a.req.t_first = time.perf_counter()
+                    self.obs.lifecycle.first_token(rid, t=a.req.t_first)
+                a.req.output.append(tok)
+                a.cur_token = tok
+            else:
+                emit = emits[rid]
+                proposed = len(drafts.get(rid, []))
+                # the last emitted token is the model's own (correction or
+                # bonus), so drafts surviving into the stream are len - 1,
+                # capped by proposed (an eos cut can only shorten the prefix)
+                accepted = min(len(emit) - 1, proposed)
+                self.kctl.observe(rid, proposed, accepted)
+                n_proposed += proposed
+                n_accepted += accepted
+                n_steps += 1
+                a.length += len(emit)
+                if not a.req.t_first:
+                    a.req.t_first = time.perf_counter()
+                    self.obs.lifecycle.first_token(rid, t=a.req.t_first)
+                a.req.output.extend(emit)
+                a.cur_token = emit[-1]
+            req = a.req
+            hit_eos = (req.eos_id is not None and req.output
+                       and req.output[-1] == req.eos_id)
+            if len(req.output) >= req.max_new_tokens or hit_eos:
+                self._finish(rid)
+        m = self.obs.metrics
+        m.counter("spec_proposed_tokens_total").inc(n_proposed)
+        m.counter("spec_accepted_tokens_total").inc(n_accepted)
+        m.counter("spec_verify_steps_total").inc(n_steps)
+        if n_steps:
+            self.obs.tracer.counter(
+                "spec", {"proposed": n_proposed, "accepted": n_accepted})
+
     # ------------- fault handling -------------
 
     def _inject_nan(self, logits):
@@ -1271,8 +1549,11 @@ class PagedServingEngine(_EngineCore):
 
     def _scan_nonfinite(self, logits) -> set:
         """Rows whose logits contain NaN/Inf (one device sync; only runs
-        when the guard is enabled)."""
-        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        when the guard is enabled).  Reduces over every non-batch axis so
+        the (B, V) plain decode and (B, n, V) speculative verify shapes both
+        collapse to one flag per row."""
+        axes = tuple(range(1, logits.ndim))
+        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=axes))
         return {row for row, rid in enumerate(self.rows)
                 if rid is not None and not bool(finite[row])}
 
@@ -1282,6 +1563,7 @@ class PagedServingEngine(_EngineCore):
         the batch keeps decoding bit-exactly."""
         a = self.active.pop(rid)
         self._free_row(rid)
+        self._spec_release(rid)
         self.pool.release(rid)
         self.obs.metrics.counter("quarantines_total").inc()
         self.obs.tracer.instant("fault.quarantine", cat="fault",
@@ -1307,6 +1589,10 @@ class PagedServingEngine(_EngineCore):
         if not self.spilled:
             self.pool.sanitizer_check_leaks(
                 what=f"drained paged engine (step {self.step_count})")
+            if self.draft is not None and hasattr(
+                    self.draft, "sanitizer_check_leaks"):
+                self.draft.sanitizer_check_leaks(
+                    what=f"drained draft pool (step {self.step_count})")
 
     # ------------- stats -------------
 

@@ -556,3 +556,60 @@ class CachePaging:
 
         walk(self.template, new_caches)
         return out
+
+    def commit_select(self, pools: Sequence[jnp.ndarray], snaps,
+                      slabs: jnp.ndarray, sel: jnp.ndarray
+                      ) -> List[jnp.ndarray]:
+        """Roll every slab row back to one selected speculative position.
+
+        ``snaps`` is the snapshot tree a ``paged_spec_decode_step`` returns:
+        it mirrors the cache tree, with every recurrent-state leaf stacked
+        position-major to ``(n, B, *row)`` (``None`` under attention
+        elements -- KV rollback is a host-side length reset, so page pools
+        pass through untouched).  ``sel`` (B,) picks, per request, the last
+        accepted position; row b of every slab pool is rewritten with
+        ``snap[sel[b], b]``.  Requests that accepted every position rewrite
+        their final state verbatim, so running this after :meth:`commit`
+        is idempotent for them.
+        """
+        it = iter(zip(pools, self.specs))
+        take = lambda: next(it)
+        B = int(slabs.shape[0])
+        bidx = jnp.arange(B)
+        out: List[jnp.ndarray] = []
+
+        def skip(t):
+            for _ in self._iter_template_leaves(t):
+                pool, _ = take()
+                out.append(pool)
+
+        def put(snap_leaf):
+            pool, spec = take()
+            assert spec.kind == "slab", \
+                "snapshot leaf aligned with a page spec"
+            vals = snap_leaf[sel, bidx]            # (B, *row)
+            out.append(pool.at[slabs].set(
+                vals.reshape((B,) + spec.content_shape)))
+
+        def walk(t, s):
+            if t is None:
+                return
+            if s is None or isinstance(t, AC.KVCache):
+                skip(t)
+                return
+            if isinstance(t, F.QuantizedTensor):
+                for f in sorted(t.payload):
+                    put(s[f])
+                return
+            if isinstance(t, dict):
+                for key in sorted(t):
+                    walk(t[key], s[key])
+                return
+            if isinstance(t, (tuple, list)):
+                for a, b in zip(t, s):
+                    walk(a, b)
+                return
+            put(s)
+
+        walk(self.template, snaps)
+        return out

@@ -121,6 +121,13 @@ class PagedStatePool:
         # pools -- XLA updates page slots and slab rows in place instead of
         # copying every pool every token
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        # speculative verify: n positions per row in one pass, returning
+        # per-position state snapshots; commit_spec rolls rejected drafts
+        # back by rewriting slab rows from the selected snapshot
+        self._decode_spec = jax.jit(self._decode_spec_impl,
+                                    donate_argnums=(1,))
+        self._commit_spec = jax.jit(self._commit_spec_impl,
+                                    donate_argnums=(0,))
         # dense-gather reference path (parity tests; never donates, so
         # callers may hold pool snapshots around a reference step)
         self._decode_gather = jax.jit(self._decode_gather_impl)  # lint: disable=JH104
@@ -174,6 +181,10 @@ class PagedStatePool:
         on the pool track."""
         self._obs = obs
         self._decode = obs.wrap_jit(self._decode, "pool.decode")
+        self._decode_spec = obs.wrap_jit(self._decode_spec,
+                                         "pool.decode_spec")
+        self._commit_spec = obs.wrap_jit(self._commit_spec,
+                                         "pool.commit_spec")
         self._decode_gather = obs.wrap_jit(self._decode_gather,
                                            "pool.decode_gather")
         self._insert = obs.wrap_jit(self._insert, "pool.prefill_insert")
@@ -414,6 +425,21 @@ class PagedStatePool:
         pools = self.paging.commit(pools, new_views, slabs)
         return logits, pools
 
+    def _decode_spec_impl(self, params, pools, bt, slabs, lengths, tokens,
+                          seed):
+        """Speculative verify step: tokens (B, n) run through the paged
+        caches in one pass; the per-position state snapshots ride back so
+        ``commit_spec`` can roll rejected positions back bit-exactly."""
+        views = self.paging.paged_view(pools, bt, slabs, lengths)
+        logits, new_views, snaps = M.paged_spec_decode_step(
+            params, cfg=self.cfg, tokens=tokens, caches=views,
+            lengths=lengths, seed=seed, mesh_axes=self.mesh_axes)
+        pools = self.paging.commit(pools, new_views, slabs)
+        return logits, pools, snaps
+
+    def _commit_spec_impl(self, pools, snaps, slabs, sel):
+        return self.paging.commit_select(pools, snaps, slabs, sel)
+
     def _decode_gather_impl(self, params, pools, bt, slabs, lengths, tokens,
                             seed):
         """Dense-gather reference step (the pre-paged-kernel data path):
@@ -426,11 +452,19 @@ class PagedStatePool:
         pools = self.paging.scatter_step(pools, new_caches, bt, slabs, lengths)
         return logits, pools
 
-    def block_table(self, rids: Sequence[Optional[int]]) -> np.ndarray:
-        """Dense (B, npg_bucket) block table; absent rows use scratch ids."""
+    def block_table(self, rids: Sequence[Optional[int]],
+                    min_pages: int = 1) -> np.ndarray:
+        """Dense (B, npg_bucket) block table; absent rows use scratch ids.
+
+        ``min_pages`` floors the (pre-bucketing) width: the speculative
+        verify step appends n rows per request, so its table must span
+        ``pages_for(length + n)`` even when a garbage-padded row does not
+        own that many pages yet -- those appends land on the scratch page,
+        like idle rows' writes, and are never read back.
+        """
         npg = max([len(self.page_table[r]) for r in rids if r is not None],
                   default=1)
-        npg = bucket_pages(npg)
+        npg = bucket_pages(max(npg, min_pages))
         # rows dim is the fixed decode-batch width and the page dim is
         # power-of-2 bucketed, so the trace set is bounded by design
         bt = np.zeros((len(rids), npg), np.int32)  # lint: disable=JH103
@@ -465,6 +499,39 @@ class PagedStatePool:
             jnp.asarray(lengths, jnp.int32), jnp.asarray(tokens, jnp.int32),
             jnp.int32(seed))
         return logits
+
+    def decode_spec(self, params, rids: Sequence[Optional[int]],
+                    tokens: np.ndarray, lengths: np.ndarray, seed: int,
+                    min_pages: int = 1):
+        """Run one speculative verify step: tokens (B, n) per row, logits
+        (B, n, V) back, plus the snapshot tree for ``commit_spec``.
+
+        Position i of every row runs with the seeds of the sequential
+        decode step ``seed + i``, so its logits row is bit-identical to
+        decoding that token in a normal step.  ``min_pages`` must span
+        ``pages_for(length + n)`` over the batch (see :meth:`block_table`).
+        """
+        assert self.decode_mode == "paged", \
+            "speculative decode requires the block-table-native path"
+        bt = jnp.asarray(self.block_table(rids, min_pages=min_pages))
+        slabs = jnp.asarray([self.slab_of.get(r, 0) if r is not None else 0
+                             for r in rids], jnp.int32)
+        logits, self.pools, snaps = self._decode_spec(
+            params, self.pools, bt, slabs,
+            jnp.asarray(lengths, jnp.int32), jnp.asarray(tokens, jnp.int32),
+            jnp.int32(seed))
+        return logits, snaps
+
+    def commit_spec(self, rids: Sequence[Optional[int]], snaps,
+                    sel: np.ndarray) -> None:
+        """Roll recurrent state back to each row's last accepted position
+        (``sel`` (B,), an index into the verify step's n positions).  KV
+        needs no rollback -- the engine's host lengths mask rejected rows
+        and later appends overwrite them."""
+        slabs = jnp.asarray([self.slab_of.get(r, 0) if r is not None else 0
+                             for r in rids], jnp.int32)
+        self.pools = self._commit_spec(self.pools, snaps, slabs,
+                                       jnp.asarray(sel, jnp.int32))
 
     # ------------------------------------------------------------------
     # accounting

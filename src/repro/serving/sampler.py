@@ -31,6 +31,28 @@ def _apply_top_p(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
     return jnp.where(logits < thr, -jnp.inf, logits)
 
 
+def filtered_probs(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    """Post-filter sampling distribution over the last axis.
+
+    The exact temperature/top-k/top-p chain of :func:`sample`, stopped
+    before the categorical draw -- the speculative-decode engine needs the
+    distribution itself for host-side rejection sampling (accepting a
+    drafted token with its target probability keeps the sampled stream
+    distributed exactly as non-speculative sampling).  Greedy (temperature
+    <= 0) degenerates to a point mass on the argmax.
+    """
+    if cfg.temperature <= 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1])
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        vals, _ = jax.lax.top_k(logits, cfg.top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p < 1.0:
+        logits = _apply_top_p(logits, cfg.top_p)
+    return jax.nn.softmax(logits, axis=-1)
+
+
 def sample(logits: jnp.ndarray, cfg: SamplingConfig, key) -> jnp.ndarray:
     """logits (B, V) -> tokens (B,) int32."""
     if cfg.temperature <= 0.0:

@@ -1,0 +1,21 @@
+"""Speculative decoding: draft sources and the acceptance-aware controller.
+
+The target-model side (the ``spec_verify`` SPU op, the multi-position
+paged step with state snapshots, and the engine's accept/rollback logic)
+lives in :mod:`repro.ops.spec_verify`, :mod:`repro.models.model` and
+:mod:`repro.serving.engine`; this package holds the host-side pieces that
+decide *what* to draft and *how much*:
+
+  * :class:`DraftSource` -- the protocol the engine drives
+  * :class:`NGramDraft` -- self-drafting suffix matcher (no second model)
+  * :class:`ModelDraft` -- small-model drafting over a private paged pool
+  * :class:`KController` -- per-request draft length from acceptance history
+
+See the README's "Speculative decoding" section for the greedy-exactness
+guarantee and how to enable it (``ServeConfig(spec="ngram")`` or
+``spec="model:<arch>"``).
+"""
+from repro.serving.spec.controller import KController
+from repro.serving.spec.draft import DraftSource, ModelDraft, NGramDraft
+
+__all__ = ["DraftSource", "KController", "ModelDraft", "NGramDraft"]
